@@ -1,0 +1,44 @@
+"""Shared benchmark utilities: timing, CSV emission, calibration."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds per call (jax arrays blocked on)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def calibrate_cpu_fft_rate(n: int = 128) -> float:
+    """Measured local FFT FLOP/s on this host (calibrates Fig. 5 model)."""
+    x = (np.random.default_rng(0).standard_normal((n, n, n))
+         + 1j * np.random.default_rng(1).standard_normal((n, n, n))
+         ).astype(np.complex64)
+    xj = jnp.asarray(x)
+    fn = jax.jit(lambda a: jnp.fft.fftn(a))
+    dt = time_fn(fn, xj, iters=3)
+    import math
+    flops = 5.0 * n ** 3 * math.log2(n ** 3)
+    return flops / dt

@@ -1,0 +1,43 @@
+"""Fig. 6 analogue: hybrid MPI + threading.
+
+Simulator sweep: 16 ranks, each with {1, 2, 4} worker threads; slab tasks
+are 2D FFTs (16x the work of a pencil 1D-FFT task but 1/16th the count).
+The paper finds threading helps slab more than pencil at 512^3 (1.50x vs
+1.18x at 4 threads) because slab tasks expose more intra-task parallelism;
+we model intra-task parallelism by splitting each task into per-thread
+subtasks with a per-subtask overhead, reproducing the asymmetry.
+"""
+from __future__ import annotations
+
+from repro.core.scheduler import CostModel, ScheduleSimulator, TaskSpec
+from .common import emit
+
+SPLIT_OVERHEAD = 0.12   # fraction of a task's work wasted per extra split
+
+
+def run() -> None:
+    for grid, unit in ((512, 1.0), (1024, 8.0)):
+        # one rank's stage-1 work: slab = 1 big 2D-FFT task; pencil = 16
+        # thin 1D-FFT tasks (per-rank totals equal)
+        for decomp, n_tasks in (("slab", 1), ("pencil", 16)):
+            base_cost = unit / n_tasks
+            t1 = None
+            for threads in (1, 2, 4):
+                # intra-task split: slab tasks split cleanly across threads;
+                # pencil tasks are already fine-grained (no further split)
+                if decomp == "slab":
+                    per = base_cost / threads * (1 + SPLIT_OVERHEAD
+                                                 * (threads - 1))
+                    tasks = [TaskSpec(home=i % threads, cost=per)
+                             for i in range(n_tasks * threads)]
+                else:
+                    tasks = [TaskSpec(home=i % threads, cost=base_cost)
+                             for i in range(n_tasks)]
+                r = ScheduleSimulator(threads, steal=True).run(tasks)
+                if threads == 1:
+                    t1 = r["wall_s"]
+                emit(f"fig6_{grid}c_{decomp}_t{threads}",
+                     r["wall_s"] * 1e6,
+                     f"speedup_vs_1t={t1 / r['wall_s']:.2f}x"
+                     + (" (paper 512^3: slab 1.50x / pencil 1.18x @4t)"
+                        if threads == 4 and grid == 512 else ""))

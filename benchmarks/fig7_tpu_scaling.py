@@ -1,0 +1,60 @@
+"""Fig. 7 analogue: accelerator strong scaling (TPU v5e replaces V100).
+
+The paper scales 4->24 GPUs on 480^3-840^3 grids.  We predict the same
+sweep on TPU v5e chips with the Eq. 1-2 model (197 TF/s, 819 GB/s HBM,
+3x50 GB/s ICI), overlap 0 (heFFTe-style) vs 0.8 (DaggerFFT-style chunked
+pipelining), and cross-check the 256-chip point against the compiled
+dry-run artifact when present (artifacts/dryrun/fft*.json).
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import math
+import os
+
+from repro.core.decomp import pencil, slab
+from repro.core.perfmodel import TPU_V5E, predict_fft_time
+from .common import emit
+
+
+def factor2(r):
+    a = int(math.isqrt(r))
+    while r % a:
+        a -= 1
+    return a, r // a
+
+
+def run() -> None:
+    heffte = dataclasses.replace(TPU_V5E, overlap=0.0)
+    dagger = dataclasses.replace(TPU_V5E, overlap=0.8)
+    for grid, dtype_bytes in (((480,) * 3, 16), ((720,) * 3, 16),
+                              ((840,) * 3, 8)):
+        for chips in (4, 8, 16, 24):
+            py, pz = factor2(chips)
+            dec = pencil("py", "pz")
+            sizes = {"py": py, "pz": pz}
+            t_h = predict_fft_time(grid, dec, sizes, heffte,
+                                   dtype_bytes=dtype_bytes)
+            t_d = predict_fft_time(grid, dec, sizes, dagger,
+                                   dtype_bytes=dtype_bytes, n_chunks=4)
+            emit(f"fig7_{grid[0]}c_tpu{chips}_dagger",
+                 t_d["t_total_s"] * 1e6,
+                 f"heffte={t_h['t_total_s']*1e6:.0f}us "
+                 f"speedup={t_h['t_total_s']/t_d['t_total_s']:.2f}x "
+                 f"(paper GPU: 1.04-1.36x)")
+
+    # cross-check vs compiled dry-run artifacts
+    for fn in sorted(glob.glob(os.path.join(
+            os.path.dirname(__file__), "..", "artifacts", "dryrun",
+            "fft*pod1.json"))):
+        with open(fn) as f:
+            d = json.load(f)
+        if d.get("status") != "ok":
+            continue
+        r = d["roofline"]
+        total = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        emit(f"fig7_dryrun_{d['arch']}", total * 1e6,
+             f"mesh={d['mesh']} bottleneck={r['bottleneck']} "
+             f"coll={r['t_collective_s']*1e6:.0f}us")

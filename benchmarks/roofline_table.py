@@ -1,0 +1,49 @@
+"""The LM-framework roofline table: one row per (arch x shape x mesh) from
+the dry-run artifacts.  Emits CSV rows and writes the markdown table used
+by EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells():
+    cells = []
+    for fn in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(fn) as f:
+            d = json.load(f)
+        if d.get("status") == "ok" and "roofline" in d:
+            cells.append(d)
+    return cells
+
+
+def run() -> None:
+    cells = load_cells()
+    lines = ["| arch | shape | mesh | t_comp(s) | t_mem(s) | t_coll(s) | "
+             "bottleneck | MODEL/HLO | roofline frac | peak GiB/dev |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for d in cells:
+        r = d["roofline"]
+        mem = d.get("memory", {}).get("peak_bytes_per_device", 0) / 2 ** 30
+        mesh = "x".join(map(str, d["mesh"]))
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {mesh} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | {r['bottleneck']} "
+            f"| {r['useful_flop_ratio']:.2f} | {r['roofline_fraction']:.2f} "
+            f"| {mem:.2f} |")
+        if "pod1" in json.dumps(d.get("mesh", [])) or len(d["mesh"]) == 2:
+            emit(f"roofline_{d['arch']}_{d['shape']}",
+                 max(r["t_compute_s"], r["t_memory_s"],
+                     r["t_collective_s"]) * 1e6,
+                 f"bottleneck={r['bottleneck']} "
+                 f"frac={r['roofline_fraction']:.2f}")
+    out = os.path.join(ART, "..", "roofline_table.md")
+    with open(out, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"[roofline_table] wrote {out} ({len(cells)} cells)", flush=True)

@@ -1,0 +1,23 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import traceback
+
+
+def main() -> None:
+    from . import (fig5_strong_scaling, fig6_hybrid_threads, fig7_tpu_scaling,
+                   fig8_poisson, fig9_overhead_breakdown, roofline_table,
+                   table1_stage_scheduler, table2_work_stealing)
+    print("name,us_per_call,derived")
+    for mod in (table1_stage_scheduler, table2_work_stealing,
+                fig5_strong_scaling, fig6_hybrid_threads, fig7_tpu_scaling,
+                fig8_poisson, fig9_overhead_breakdown, roofline_table):
+        try:
+            mod.run()
+        except Exception:
+            print(f"{mod.__name__},ERROR,")
+            traceback.print_exc()
+
+
+if __name__ == '__main__':
+    main()

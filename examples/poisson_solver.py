@@ -1,0 +1,69 @@
+"""Oceananigans-style pressure Poisson solver on the distributed FFT
+(the paper's flagship integration, Fig. 8).
+
+Solves lap(phi) = rhs spectrally on a triply-periodic box and on a
+(Periodic, Periodic, Bounded) channel (DCT along z), then verifies the
+discrete residual.  This is the end-to-end driver for the paper's kind of
+workload: a production solver calling the framework through its public API.
+
+Run:  PYTHONPATH=src python examples/poisson_solver.py [--n 64]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AxisType
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=5)
+    args = ap.parse_args()
+    n = args.n
+
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((1, n_dev), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    from repro.core import poisson_solve
+
+    rng = np.random.default_rng(0)
+    # divergence of a turbulent-ish velocity field as the RHS
+    rhs = rng.standard_normal((n, n, n)).astype(np.float32)
+    rhs -= rhs.mean()
+    rhs_j = jnp.asarray(rhs)
+    dx = 2 * np.pi / n
+
+    for topo in (("periodic",) * 3, ("periodic", "periodic", "bounded")):
+        t0 = time.perf_counter()
+        phi = poisson_solve(rhs_j, mesh=mesh, topology=topo)
+        phi = np.real(np.asarray(phi))
+        t_first = time.perf_counter() - t0          # includes planning
+        t0 = time.perf_counter()
+        for _ in range(args.steps):
+            phi_j = poisson_solve(rhs_j, mesh=mesh, topology=topo)
+        jax.block_until_ready(phi_j)
+        t_steady = (time.perf_counter() - t0) / args.steps
+
+        if topo[2] == "periodic":
+            lap = (sum(np.roll(phi, s, a) for a in range(3) for s in (1, -1))
+                   - 6 * phi) / dx ** 2
+        else:  # Neumann ghost cells on z
+            pz = np.concatenate([phi[:, :, :1], phi, phi[:, :, -1:]], axis=2)
+            lap = (np.roll(phi, 1, 0) + np.roll(phi, -1, 0)
+                   + np.roll(phi, 1, 1) + np.roll(phi, -1, 1)
+                   + pz[:, :, 2:] + pz[:, :, :-2] - 6 * phi) / dx ** 2
+        res = np.max(np.abs(lap - rhs)) / np.max(np.abs(rhs))
+        print(f"topology={'x'.join(t[0].upper() for t in topo)} grid={n}^3: "
+              f"residual={res:.2e} first-call={t_first*1e3:.1f}ms "
+              f"steady-state={t_steady*1e3:.1f}ms/solve")
+
+
+if __name__ == "__main__":
+    main()

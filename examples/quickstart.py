@@ -1,0 +1,70 @@
+"""Quickstart: distributed 3D FFTs with stage-per-array decomposition.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+(set XLA_FLAGS=--xla_force_host_platform_device_count=8 first to see real
+multi-device sharding; works on 1 device too).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AxisType
+
+
+def main():
+    n_dev = len(jax.devices())
+    # pencil decomposition wants a 2D process grid
+    if n_dev >= 4 and n_dev % 2 == 0:
+        mesh = jax.make_mesh((2, n_dev // 2), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+    else:
+        mesh = jax.make_mesh((1, n_dev), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+    print(f"mesh: {mesh}")
+
+    from repro.core import GLOBAL_PLAN_CACHE, fft3d, ifft3d
+
+    rng = np.random.default_rng(0)
+    x = (rng.standard_normal((32, 32, 32))
+         + 1j * rng.standard_normal((32, 32, 32))).astype(np.complex64)
+
+    # --- forward + inverse C2C, pencil decomposition ------------------------
+    xk = fft3d(jnp.asarray(x), mesh=mesh)                  # plan + execute
+    xb = ifft3d(xk, mesh=mesh)
+    print("C2C pencil roundtrip max err:",
+          float(np.max(np.abs(np.asarray(xb) - x))))
+
+    # --- same transform again: plan-cache hit (paper §V-B) ------------------
+    fft3d(jnp.asarray(x), mesh=mesh)
+    print("plan cache:", GLOBAL_PLAN_CACHE.stats())
+
+    # --- slab decomposition + chunk-pipelined redistribution ----------------
+    xk_slab = fft3d(jnp.asarray(x), mesh=mesh, decomp="slab",
+                    mesh_axes=("model",))
+    xk_chunk = fft3d(jnp.asarray(x), mesh=mesh, n_chunks=4)
+    print("slab vs pencil max diff:",
+          float(np.max(np.abs(np.asarray(xk_slab) - np.asarray(xk)))))
+    print("bulk vs chunk-pipelined max diff:",
+          float(np.max(np.abs(np.asarray(xk_chunk) - np.asarray(xk)))))
+
+    # --- R2C with automatic frequency padding --------------------------------
+    xr = rng.standard_normal((32, 32, 32)).astype(np.float32)
+    yk = fft3d(jnp.asarray(xr), mesh=mesh, kinds=("rfft", "fft", "fft"))
+    print(f"R2C output shape: {yk.shape} (freq dim padded for the mesh)")
+    xrb = ifft3d(yk, mesh=mesh, grid=(32, 32, 32),
+                 kinds=("rfft", "fft", "fft"))
+    print("R2C roundtrip max err:",
+          float(np.max(np.abs(np.asarray(xrb) - xr))))
+
+    # --- MXU matmul backend (the TPU-native four-step formulation) ----------
+    yk_mm = fft3d(jnp.asarray(x), mesh=mesh, backend="matmul")
+    print("matmul-backend max diff vs xla:",
+          float(np.max(np.abs(np.asarray(yk_mm) - np.asarray(xk)))))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Batched serving example: prefill a batch of prompts, then decode with a
+shared KV-cache budget — the serve-side end-to-end driver.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --tokens 32
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AxisType
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default="qwen3-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    from repro.configs import smoke_config
+    from repro.distributed.sharding import MeshRules
+    from repro.launch.steps import (build_params, make_decode_step,
+                                    make_prefill_step)
+    from repro.models.transformer import pad_caches
+
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((1, n_dev), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    rules = MeshRules.for_mesh(mesh)
+    cfg = smoke_config(args.arch)
+
+    with mesh:
+        params, _ = build_params(cfg, rules, abstract=False)
+        prompts = jnp.asarray(np.random.default_rng(0).integers(
+            0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+
+        prefill = jax.jit(make_prefill_step(cfg, rules))
+        decode = jax.jit(make_decode_step(cfg, rules))
+
+        t0 = time.perf_counter()
+        logits, caches = prefill(params, {"tokens": prompts})
+        caches = pad_caches(caches, cfg,
+                            max_seq=args.prompt_len + args.tokens)
+        jax.block_until_ready(logits)
+        t_prefill = time.perf_counter() - t0
+        print(f"prefill: batch={args.batch} len={args.prompt_len} "
+              f"-> {t_prefill*1e3:.1f}ms "
+              f"({args.batch*args.prompt_len/t_prefill:.0f} tok/s)")
+
+        cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        seqs = [cur]
+        t0 = time.perf_counter()
+        for i in range(args.tokens - 1):
+            nxt, _, caches = decode(params, caches, cur,
+                                    jnp.asarray(args.prompt_len + i,
+                                                jnp.int32))
+            cur = nxt[:, None].astype(jnp.int32)
+            seqs.append(cur)
+        jax.block_until_ready(cur)
+        t_dec = time.perf_counter() - t0
+        out = jnp.concatenate(seqs, axis=1)
+        print(f"decode: {args.tokens-1} steps -> {t_dec*1e3:.1f}ms "
+              f"({args.batch*(args.tokens-1)/t_dec:.0f} tok/s)")
+        print("sampled token ids (greedy), first row:",
+              np.asarray(out[0])[:16])
+
+
+if __name__ == "__main__":
+    main()

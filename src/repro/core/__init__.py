@@ -1,0 +1,21 @@
+# The paper's primary contribution: a distributed FFT framework with
+# stage-specific decompositions, pipelined redistribution and plan caching,
+# plus the host-side dynamic task scheduler (work stealing) it rides on.
+from .api import fft3d, ifft3d, poisson_eigenvalues, poisson_solve
+from .decomp import (Decomposition, Redistribution, StageLayout,
+                     local_shape, make_decomposition, pencil, slab,
+                     validate_grid)
+from .pipeline import (PipelineSpec, build_pipeline, compile_pipeline,
+                       make_spec)
+from .plan import GLOBAL_PLAN_CACHE, PlanCache, plan_key
+from .redistribute import redistribute, transpose_cost_bytes
+from . import transforms
+
+__all__ = [
+    "fft3d", "ifft3d", "poisson_solve", "poisson_eigenvalues",
+    "Decomposition", "Redistribution", "StageLayout", "local_shape",
+    "make_decomposition", "pencil", "slab", "validate_grid",
+    "PipelineSpec", "build_pipeline", "compile_pipeline", "make_spec",
+    "GLOBAL_PLAN_CACHE", "PlanCache", "plan_key",
+    "redistribute", "transpose_cost_bytes", "transforms",
+]

@@ -1,0 +1,153 @@
+"""User-facing DaggerFFT-style API.
+
+Mirrors the paper's §V-A surface: call ``fft3d``/``ifft3d`` on an array,
+optionally choosing decomposition ("pencil"/"slab"), transform kinds per
+dimension (C2C "fft", R2C "rfft" on x, R2R "dct2"/"dst2"), backend and the
+overlap chunk count.  Plans (compiled executables) are cached transparently.
+
+Example (complex-to-complex, pencil decomposition):
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    xk = fft3d(x, mesh=mesh)                    # forward
+    x2 = ifft3d(xk, mesh=mesh)                  # round-trip
+
+``poisson_solve`` is the Oceananigans-style spectral Poisson solver built on
+top (benchmarked in fig8_poisson).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .decomp import make_decomposition, validate_grid
+from .pipeline import PipelineSpec, build_pipeline, compile_pipeline, make_spec
+
+_DEF_KINDS = ("fft", "fft", "fft")
+
+
+def _default_fft_axes(mesh: Mesh, decomp: str) -> Tuple[str, ...]:
+    """Pick mesh axes for the pencil/slab process grid."""
+    names = tuple(mesh.axis_names)
+    # Prefer the canonical production axes if present.
+    if decomp == "pencil":
+        if {"data", "model"}.issubset(names):
+            return ("data", "model")
+        if len(names) < 2:
+            raise ValueError("pencil decomposition needs a >=2D mesh")
+        return names[-2:]
+    if "model" in names:
+        return ("model",)
+    return (names[-1],)
+
+
+def _prep(x_shape, mesh: Mesh, decomp: str, kinds, backend: str,
+          n_chunks: int, inverse: bool, mesh_axes) -> PipelineSpec:
+    if len(x_shape) < 3:
+        raise ValueError("fft3d expects (..., Nx, Ny, Nz)")
+    n_batch = len(x_shape) - 3
+    axes = tuple(mesh_axes) if mesh_axes else _default_fft_axes(mesh, decomp)
+    dec = make_decomposition(decomp, axes)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = make_spec(mesh, tuple(x_shape[n_batch:]), dec, tuple(kinds),
+                     backend=backend, n_chunks=n_chunks, inverse=inverse,
+                     batch_spec=(None,) * n_batch)
+    if inverse:
+        validate_grid(dec, spec.eff_grid, axis_sizes)
+    else:
+        validate_grid(dec, spec.eff_grid, axis_sizes)
+    return spec
+
+
+def fft3d(x: jax.Array, *, mesh: Mesh, decomp: str = "pencil",
+          kinds: Sequence[str] = _DEF_KINDS, backend: str = "xla",
+          n_chunks: int = 1, mesh_axes: Optional[Sequence[str]] = None,
+          precompiled: bool = True) -> jax.Array:
+    """Distributed forward 3D transform of the trailing three dims of x."""
+    spec = _prep(x.shape, mesh, decomp, kinds, backend, n_chunks, False,
+                 mesh_axes)
+    if kinds[0] != "rfft" and not jnp.iscomplexobj(x) and "dct2" not in kinds \
+            and "dst2" not in kinds:
+        x = x.astype(jnp.complex64)
+    if precompiled:
+        exe = compile_pipeline(mesh, spec, batch_shape=x.shape[:-3],
+                               dtype=x.dtype)
+        x = jax.device_put(x, NamedSharding(mesh, spec.in_spec()))
+        return exe(x)
+    return jax.jit(build_pipeline(mesh, spec))(x)
+
+
+def ifft3d(x: jax.Array, *, mesh: Mesh, grid: Optional[Tuple[int, int, int]] = None,
+           decomp: str = "pencil", kinds: Sequence[str] = _DEF_KINDS,
+           backend: str = "xla", n_chunks: int = 1,
+           mesh_axes: Optional[Sequence[str]] = None,
+           precompiled: bool = True) -> jax.Array:
+    """Inverse of ``fft3d``.  ``kinds`` are the FORWARD kinds.
+
+    For R2C pipelines pass ``grid`` = the original real-space grid (the
+    frequency dim of ``x`` is padded, so it cannot be inferred).
+    """
+    n_batch = x.ndim - 3
+    logical = tuple(grid) if grid is not None else tuple(x.shape[n_batch:])
+    axes = tuple(mesh_axes) if mesh_axes else _default_fft_axes(mesh, decomp)
+    dec = make_decomposition(decomp, axes)
+    spec = make_spec(mesh, logical, dec, tuple(kinds), backend=backend,
+                     n_chunks=n_chunks, inverse=True,
+                     batch_spec=(None,) * n_batch)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    validate_grid(dec, spec.eff_grid, axis_sizes)
+    if precompiled:
+        exe = compile_pipeline(mesh, spec, batch_shape=x.shape[:-3],
+                               dtype=x.dtype)
+        x = jax.device_put(x, NamedSharding(mesh, spec.in_spec()))
+        return exe(x)
+    return jax.jit(build_pipeline(mesh, spec))(x)
+
+
+def poisson_eigenvalues(n: int, length: float = 2 * np.pi,
+                        topology: str = "periodic") -> np.ndarray:
+    """Second-order finite-difference spectral eigenvalues (Oceananigans-style)."""
+    dx = length / n
+    i = np.arange(n)
+    if topology == "periodic":
+        return (2.0 * (np.cos(2.0 * np.pi * i / n) - 1.0)) / dx**2
+    # bounded (staggered-grid DCT eigenvalues)
+    return (2.0 * (np.cos(np.pi * i / n) - 1.0)) / dx**2
+
+
+def poisson_solve(rhs: jax.Array, *, mesh: Mesh,
+                  topology: Tuple[str, str, str] = ("periodic",) * 3,
+                  lengths: Tuple[float, ...] = (2 * np.pi,) * 3,
+                  decomp: str = "pencil", backend: str = "xla",
+                  n_chunks: int = 1) -> jax.Array:
+    """Solve lap(phi) = rhs spectrally on a (Periodic|Bounded)^3 box.
+
+    Periodic dims use C2C FFTs; Bounded dims use DCT-II (homogeneous Neumann),
+    matching the Oceananigans pressure-solver topologies in paper Fig. 8.
+    """
+    grid = rhs.shape[-3:]
+    kinds = tuple("fft" if t == "periodic" else "dct2" for t in topology)
+    xk = fft3d(rhs.astype(jnp.complex64) if "fft" in kinds else rhs,
+               mesh=mesh, decomp=decomp, kinds=kinds, backend=backend,
+               n_chunks=n_chunks)
+    lams = [
+        poisson_eigenvalues(n, l, t)
+        for n, l, t in zip(grid, lengths, topology)
+    ]
+    lam = (lams[0][:, None, None] + lams[1][None, :, None]
+           + lams[2][None, None, :])
+    lam_flat = lam.reshape(-1)
+    lam_flat[0] = 1.0  # pin the null mode (mean) to zero
+    lam = lam_flat.reshape(lam.shape)
+    scaled = xk / jnp.asarray(lam, dtype=xk.dtype)
+    # zero the null (mean) mode explicitly
+    zero = jnp.zeros((), scaled.dtype)
+    scaled = scaled.at[(0,) * scaled.ndim].set(zero)
+    phi = ifft3d(scaled, mesh=mesh, grid=grid, decomp=decomp, kinds=kinds,
+                 backend=backend, n_chunks=n_chunks)
+    if not jnp.iscomplexobj(rhs):
+        phi = jnp.real(phi)
+    return phi

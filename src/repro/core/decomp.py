@@ -1,0 +1,160 @@
+"""Decomposition descriptors for distributed FFTs.
+
+The paper's central structural idea (Alg. 1) is that each FFT stage owns its
+own distributed array with a *stage-specific* layout:
+
+  pencil:  D1 = (X full,   Y/Py,    Z/Pz)   -> x-FFT local
+           D2 = (X/Py,     Y full,  Z/Pz)   -> y-FFT local
+           D3 = (X/Py,     Y/Pz,    Z full) -> z-FFT local
+  slab:    D1 = (X full,   Y full,  Z/P)    -> 2D xy-FFT local
+           D3 = (X/P,      Y full,  Z full) -> z-FFT local
+
+A ``StageLayout`` records which mesh axis shards which array dimension; a
+``Redistribution`` records the all_to_all that moves one layout to the next.
+These are pure metadata — no device state is touched here, so the module is
+importable everywhere (tests, dry-run, benchmarks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+from jax.sharding import PartitionSpec as P
+
+Axis = Optional[str]  # mesh axis name or None (replicated / full dim)
+
+
+@dataclasses.dataclass(frozen=True)
+class StageLayout:
+    """Layout of one FFT stage's distributed array.
+
+    ``spec[d]`` is the mesh axis that shards array dim ``d`` (None = full).
+    ``fft_dims`` are the array dims transformed locally in this stage — they
+    must be unsharded (None) in ``spec``.
+    """
+
+    spec: Tuple[Axis, Axis, Axis]
+    fft_dims: Tuple[int, ...]
+
+    def __post_init__(self):
+        for d in self.fft_dims:
+            if self.spec[d] is not None:
+                raise ValueError(
+                    f"stage transforms dim {d} but it is sharded over "
+                    f"{self.spec[d]!r}: {self.spec}"
+                )
+
+    def partition_spec(self, extra_leading: int = 0) -> P:
+        """PartitionSpec, optionally with leading replicated (batch) dims."""
+        return P(*((None,) * extra_leading + self.spec))
+
+
+@dataclasses.dataclass(frozen=True)
+class Redistribution:
+    """A global transpose between two stage layouts.
+
+    Inside ``shard_map`` this is one ``lax.all_to_all`` over ``mesh_axis``:
+    local dim ``split_dim`` is scattered across the axis while ``concat_dim``
+    is gathered, i.e. the sharding moves from ``concat_dim`` to ``split_dim``.
+    """
+
+    mesh_axis: str
+    split_dim: int    # full before, sharded after
+    concat_dim: int   # sharded before, full after
+
+    def __post_init__(self):
+        if self.split_dim == self.concat_dim:
+            raise ValueError("split_dim and concat_dim must differ")
+
+
+@dataclasses.dataclass(frozen=True)
+class Decomposition:
+    """A full 3D FFT plan skeleton: stage layouts + redistributions.
+
+    ``stages[i]`` is executed, then ``redists[i]`` (if any) realigns data for
+    ``stages[i+1]``. len(redists) == len(stages) - 1.
+    """
+
+    name: str
+    mesh_axes: Tuple[str, ...]
+    stages: Tuple[StageLayout, ...]
+    redists: Tuple[Redistribution, ...]
+
+    def __post_init__(self):
+        if len(self.redists) != len(self.stages) - 1:
+            raise ValueError("need exactly one redistribution between stages")
+
+
+def pencil(ay: str = "data", az: str = "model") -> Decomposition:
+    """2D pencil decomposition over mesh axes (ay, az).
+
+    Matches Alg. 1: three stages, two transposes.  The x<->y transpose runs
+    over ``ay`` (groups that share a z-slab), the y<->z transpose over ``az``.
+    """
+    return Decomposition(
+        name="pencil",
+        mesh_axes=(ay, az),
+        stages=(
+            StageLayout(spec=(None, ay, az), fft_dims=(0,)),   # D1: x-FFT
+            StageLayout(spec=(ay, None, az), fft_dims=(1,)),   # D2: y-FFT
+            StageLayout(spec=(ay, az, None), fft_dims=(2,)),   # D3: z-FFT
+        ),
+        redists=(
+            Redistribution(mesh_axis=ay, split_dim=0, concat_dim=1),
+            Redistribution(mesh_axis=az, split_dim=1, concat_dim=2),
+        ),
+    )
+
+
+def slab(a: str = "data") -> Decomposition:
+    """1D slab decomposition over mesh axis ``a``.
+
+    Two stages: a local 2D xy-FFT on full slabs, one transpose, then the
+    z-FFT.  Scalability is bounded by Nz >= |a| (the paper's §II-A caveat);
+    ``validate_grid`` enforces it.
+    """
+    return Decomposition(
+        name="slab",
+        mesh_axes=(a,),
+        stages=(
+            StageLayout(spec=(None, None, a), fft_dims=(0, 1)),  # 2D xy-FFT
+            StageLayout(spec=(a, None, None), fft_dims=(2,)),    # z-FFT
+        ),
+        redists=(Redistribution(mesh_axis=a, split_dim=0, concat_dim=2),),
+    )
+
+
+def make_decomposition(kind: str, mesh_axes: Sequence[str]) -> Decomposition:
+    if kind == "pencil":
+        if len(mesh_axes) != 2:
+            raise ValueError("pencil decomposition needs two mesh axes")
+        return pencil(*mesh_axes)
+    if kind == "slab":
+        if len(mesh_axes) != 1:
+            raise ValueError("slab decomposition needs one mesh axis")
+        return slab(*mesh_axes)
+    raise ValueError(f"unknown decomposition kind: {kind!r}")
+
+
+def validate_grid(decomp: Decomposition, grid: Tuple[int, int, int],
+                  axis_sizes: dict) -> None:
+    """Check every stage's local block has integral shape on this mesh."""
+    for stage in decomp.stages:
+        for d, ax in enumerate(stage.spec):
+            if ax is None:
+                continue
+            size = axis_sizes[ax]
+            if grid[d] % size != 0:
+                raise ValueError(
+                    f"{decomp.name}: grid dim {d} ({grid[d]}) not divisible "
+                    f"by mesh axis {ax!r} (size {size})"
+                )
+
+
+def local_shape(stage: StageLayout, grid: Tuple[int, int, int],
+                axis_sizes: dict) -> Tuple[int, int, int]:
+    """Per-device block shape of this stage's DArray."""
+    return tuple(
+        n if ax is None else n // axis_sizes[ax]
+        for n, ax in zip(grid, stage.spec)
+    )

@@ -1,0 +1,109 @@
+"""Analytic LogP + roofline performance model for the distributed FFT.
+
+Used by the Fig. 5/6/7/9 benchmark analogues: on this CPU-only container we
+cannot time a 256-chip pod, so scaling curves are *predicted* from the same
+latency-bandwidth formulation the paper uses (Eq. 1-2, 7), with machine
+constants either (a) the TPU v5e targets, or (b) calibrated from measured
+single-core runs.  The dry-run roofline (distributed/roofline.py) provides
+the cross-check: its collective-bytes term and this model's transpose-volume
+term must agree, and tests assert they do.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Sequence, Tuple
+
+from .decomp import Decomposition, local_shape
+from .redistribute import transpose_cost_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class Machine:
+    """Per-rank hardware constants."""
+    name: str
+    flops: float                 # sustainable FLOP/s per rank
+    mem_bw: float                # HBM/DRAM bytes/s per rank
+    net_alpha_s: float           # per-message latency (Eq. 1 alpha)
+    net_bw: float                # per-rank injection bandwidth (1/beta)
+    overlap: float = 0.0         # 0 = bulk-sync, 1 = perfect Eq. 2 overlap
+
+
+TPU_V5E = Machine(name="tpu_v5e", flops=197e12, mem_bw=819e9,
+                  net_alpha_s=1e-6, net_bw=3 * 50e9)
+# Xeon 6240R-ish single core with FFTW (calibratable).  net_bw is the
+# PER-RANK share of the node NIC: InfiniBand HDR (~25 GB/s) divided across
+# 48 ranks/node with contention ~= 0.5-1 GB/s — the regime where the
+# paper's overlap wins materialize.
+CPU_CORE = Machine(name="cpu_core", flops=8e9, mem_bw=8e9,
+                   net_alpha_s=2e-5, net_bw=0.8e9)
+
+
+def fft_stage_flops(grid: Tuple[int, int, int], dims: Sequence[int],
+                    c2c: bool = True) -> float:
+    """FLOPs of one local stage over the whole grid: 5 n log2 n per line."""
+    total = 0.0
+    n_all = grid[0] * grid[1] * grid[2]
+    for d in dims:
+        n = grid[d]
+        lines = n_all / n
+        total += lines * 5.0 * n * math.log2(max(n, 2))
+    return total * (1.0 if c2c else 0.5)
+
+
+def fft_total_flops(grid: Tuple[int, int, int], c2c: bool = True) -> float:
+    return fft_stage_flops(grid, (0, 1, 2), c2c)
+
+
+def predict_fft_time(grid: Tuple[int, int, int], decomp: Decomposition,
+                     axis_sizes: Dict[str, int], machine: Machine,
+                     *, dtype_bytes: int = 8, n_chunks: int = 1,
+                     sched_overhead_s: float = 0.0) -> Dict[str, float]:
+    """Per-stage LogP prediction of one forward 3D FFT (Eq. 1-2).
+
+    Returns component times; ``total`` honours the machine's overlap factor:
+    overlap=0 sums compute+comm (bulk-sync), overlap=1 takes max (Eq. 2).
+    """
+    ranks = 1
+    for a in decomp.mesh_axes:
+        ranks *= axis_sizes[a]
+
+    t_comp = 0.0
+    for stage in decomp.stages:
+        flops = fft_stage_flops(grid, stage.fft_dims) / ranks
+        shape = local_shape(stage, grid, axis_sizes)
+        touched = 2 * shape[0] * shape[1] * shape[2] * dtype_bytes
+        t_comp += max(flops / machine.flops, touched / machine.mem_bw)
+
+    t_comm = 0.0
+    n_msgs = 0.0
+    for stage, redist in zip(decomp.stages, decomp.redists):
+        shape = local_shape(stage, grid, axis_sizes)
+        peers = axis_sizes[redist.mesh_axis]
+        vol = transpose_cost_bytes(shape, dtype_bytes, peers)
+        # Eq. 1: alpha * |S| + beta * m, per chunk round
+        t_comm += (machine.net_alpha_s * (peers - 1) * n_chunks
+                   + vol / machine.net_bw)
+        n_msgs += (peers - 1) * n_chunks
+
+    bulk = t_comp + t_comm
+    overlapped = max(t_comp, t_comm)
+    total = (1 - machine.overlap) * bulk + machine.overlap * overlapped
+    return {
+        "t_comp_s": t_comp,
+        "t_comm_s": t_comm,
+        "t_total_s": total + sched_overhead_s,
+        "t_sched_s": sched_overhead_s,
+        "messages": n_msgs,
+        "ranks": ranks,
+    }
+
+
+def strong_scaling_curve(grid, decomp_factory, rank_list, machine,
+                         **kw) -> Dict[int, Dict[str, float]]:
+    """predict_fft_time across rank counts; decomp_factory(ranks)->(decomp, axis_sizes)."""
+    out = {}
+    for r in rank_list:
+        decomp, sizes = decomp_factory(r)
+        out[r] = predict_fft_time(grid, decomp, sizes, machine, **kw)
+    return out

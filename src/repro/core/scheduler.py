@@ -1,0 +1,317 @@
+"""Locality-aware dynamic task scheduler with work stealing (paper §III-C, Alg. 3).
+
+Three cooperating pieces:
+
+* ``place_tasks``        — Alg. 3 verbatim: affinity-argmax placement, then a
+  variance-triggered rebalancing pass that migrates queued tasks from
+  overloaded to underutilized workers.
+* ``WorkStealingPool``   — a real thread pool with per-worker deques.  Owners
+  pop from the head, thieves steal from the tail, and a steal only happens
+  when the predicted idle time exceeds the LogP steal cost
+  (Eq. 5–6: steal iff I_q > tau_s = L + V/B + sigma).  This is the *host*
+  backend of the framework: chunk-level jit'd FFTs release the GIL, so
+  threads genuinely overlap on multi-core hosts.
+* ``ScheduleSimulator``  — a deterministic discrete-event model of the same
+  policy, used for scheduling studies on this 1-core container and for the
+  paper's Table II / Fig. 6 / Fig. 9 reproductions (per-thread times,
+  imbalance %, overhead fractions).
+
+On TPU none of this runs on-device (SPMD is static — see DESIGN.md §2); the
+scheduler survives as the host-side runtime and as the cost model that picks
+chunk counts for the pipelined redistribution.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import heapq
+import statistics
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Task + cost model (LogP, Eq. 3-5)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TaskSpec:
+    """One chunk-level FFT task."""
+    fn: Optional[Callable] = None          # live execution (pool)
+    args: tuple = ()
+    home: int = 0                          # worker holding the input chunk
+    cost: float = 1.0                      # estimated compute seconds
+    data_bytes: int = 0                    # chunk size (steal transfer volume)
+    tag: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """LogP-style parameters (Eq. 4-5)."""
+    latency_s: float = 5e-6                # L: one-way latency
+    bandwidth_Bps: float = 12e9            # B: effective steal bandwidth
+    steal_overhead_s: float = 2e-6         # sigma: queue mgmt + serialization
+
+    def steal_cost(self, task: TaskSpec) -> float:
+        return (self.latency_s + task.data_bytes / self.bandwidth_Bps
+                + self.steal_overhead_s)
+
+    def placement_cost(self, task: TaskSpec, worker: int) -> float:
+        """Eq. 3: w_ij = C_comp + C_comm (comm is zero at the home worker)."""
+        comm = 0.0 if worker == task.home else (
+            self.latency_s + task.data_bytes / self.bandwidth_Bps)
+        return task.cost + comm
+
+
+# ---------------------------------------------------------------------------
+# Alg. 3 — placement + variance-triggered rebalance
+# ---------------------------------------------------------------------------
+
+def place_tasks(tasks: Sequence[TaskSpec], n_workers: int,
+                cost_model: CostModel = CostModel(),
+                variance_threshold: float = 0.25,
+                affinity: Optional[Callable[[TaskSpec, int], float]] = None,
+                ) -> List[int]:
+    """Assign each task to a worker.  Returns sigma: task index -> worker.
+
+    Placement phase: argmax affinity (default: 1 at the home worker, 0
+    elsewhere — chunk data lives where the decomposition put it).
+    Correction phase: if the coefficient of variation of worker loads exceeds
+    ``variance_threshold``, migrate tail tasks from the most- to the
+    least-loaded worker until balanced.
+    """
+    if affinity is None:
+        affinity = lambda t, w: 1.0 if w == t.home else 0.0
+
+    load = [0.0] * n_workers
+    queues: List[List[int]] = [[] for _ in range(n_workers)]
+    sigma = [0] * len(tasks)
+    for i, t in enumerate(tasks):
+        # argmax affinity; ties -> least loaded (the "least-loaded unit"
+        # secondary rule from Alg. 3)
+        best = max(range(n_workers),
+                   key=lambda w: (affinity(t, w), -load[w]))
+        sigma[i] = best
+        queues[best].append(i)
+        load[best] += cost_model.placement_cost(t, best)
+
+    def cv() -> float:
+        m = statistics.mean(load)
+        if m <= 0:
+            return 0.0
+        return statistics.pstdev(load) / m
+
+    # Rebalance(sigma, W, L): greedy migration of queued tasks
+    guard = 0
+    while cv() > variance_threshold and guard < 16 * len(tasks) + 16:
+        guard += 1
+        src = max(range(n_workers), key=lambda w: load[w])
+        dst = min(range(n_workers), key=lambda w: load[w])
+        if not queues[src]:
+            break
+        i = queues[src].pop()  # migrate from the tail (coldest data)
+        t = tasks[i]
+        new_cost = cost_model.placement_cost(t, dst)
+        if load[dst] + new_cost >= load[src]:
+            queues[src].append(i)
+            break  # migration would not help; stop
+        load[src] -= cost_model.placement_cost(t, src)
+        load[dst] += new_cost
+        sigma[i] = dst
+        queues[dst].append(i)
+    return sigma
+
+
+# ---------------------------------------------------------------------------
+# Live thread pool with work stealing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class WorkerStats:
+    busy_s: float = 0.0
+    tasks: int = 0
+    steals: int = 0
+    finished_at: float = 0.0
+
+
+class WorkStealingPool:
+    """Per-worker deques + owner-head/thief-tail stealing (Eq. 6 gated)."""
+
+    def __init__(self, n_workers: int, *, steal: bool = True,
+                 cost_model: CostModel = CostModel()):
+        self.n = n_workers
+        self.steal = steal
+        self.cm = cost_model
+        self.deques = [collections.deque() for _ in range(n_workers)]
+        self.lock = threading.Lock()
+        self.stats = [WorkerStats() for _ in range(n_workers)]
+        self._pending = 0
+
+    def submit(self, task: TaskSpec, worker: Optional[int] = None) -> None:
+        w = task.home if worker is None else worker
+        with self.lock:
+            self.deques[w % self.n].append(task)
+            self._pending += 1
+
+    def _try_get(self, w: int) -> Optional[Tuple[TaskSpec, bool]]:
+        with self.lock:
+            if self.deques[w]:
+                self._pending -= 1
+                return self.deques[w].popleft(), False
+            if not self.steal:
+                return None
+            # victim = max remaining load (approximated by queue cost sum)
+            victim, best_load = -1, 0.0
+            for v in range(self.n):
+                if v == w or not self.deques[v]:
+                    continue
+                load = sum(t.cost for t in self.deques[v])
+                if load > best_load:
+                    victim, best_load = v, load
+            if victim < 0:
+                return None
+            t = self.deques[victim][-1]
+            # Eq. 6: predicted idle (share of victim's backlog we would
+            # otherwise wait out) must exceed the steal cost.
+            idle_pred = best_load / 2.0
+            if idle_pred <= self.cm.steal_cost(t):
+                return None
+            self.deques[victim].pop()
+            self._pending -= 1
+            return t, True
+
+    def run(self) -> Dict[str, float]:
+        """Execute all submitted tasks; returns aggregate timing stats."""
+        t_start = time.perf_counter()
+
+        def worker_loop(w: int):
+            st = self.stats[w]
+            while True:
+                got = self._try_get(w)
+                if got is None:
+                    with self.lock:
+                        empty = self._pending == 0
+                    if empty:
+                        break
+                    time.sleep(1e-5)
+                    continue
+                task, stolen = got
+                t0 = time.perf_counter()
+                if task.fn is not None:
+                    task.fn(*task.args)
+                st.busy_s += time.perf_counter() - t0
+                st.tasks += 1
+                st.steals += int(stolen)
+            st.finished_at = time.perf_counter() - t_start
+
+        threads = [threading.Thread(target=worker_loop, args=(w,))
+                   for w in range(self.n)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        wall = time.perf_counter() - t_start
+        busys = [s.busy_s for s in self.stats]
+        return {
+            "wall_s": wall,
+            "imbalance_pct": (100.0 * statistics.pstdev(busys)
+                              / max(statistics.mean(busys), 1e-12)),
+            "max_thread_s": max(busys),
+            "min_thread_s": min(busys),
+            "steals": sum(s.steals for s in self.stats),
+            "tasks": sum(s.tasks for s in self.stats),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Deterministic discrete-event simulator of the same policy
+# ---------------------------------------------------------------------------
+
+class ScheduleSimulator:
+    """Event-driven model: per-worker queues, optional tail stealing.
+
+    Virtual time, fully deterministic; reproduces the Table II experiment
+    (imbalance with/without stealing) and drives Eq. 7 studies without
+    needing real cores.  ``speeds[w]`` scales worker w's compute rate
+    (heterogeneity knob).
+    """
+
+    def __init__(self, n_workers: int, *, steal: bool = True,
+                 cost_model: CostModel = CostModel(),
+                 speeds: Optional[Sequence[float]] = None):
+        self.n = n_workers
+        self.steal = steal
+        self.cm = cost_model
+        self.speeds = list(speeds) if speeds else [1.0] * n_workers
+
+    def run(self, tasks: Sequence[TaskSpec],
+            sigma: Optional[Sequence[int]] = None) -> Dict[str, float]:
+        queues: List[collections.deque] = [collections.deque()
+                                           for _ in range(self.n)]
+        placement = sigma if sigma is not None else [t.home for t in tasks]
+        for i, t in enumerate(tasks):
+            queues[placement[i] % self.n].append(t)
+
+        busy = [0.0] * self.n
+        finish = [0.0] * self.n
+        steals = 0
+        done_tasks = [0] * self.n
+        # (available_time, worker) min-heap
+        heap = [(0.0, w) for w in range(self.n)]
+        heapq.heapify(heap)
+        remaining = len(tasks)
+
+        def queue_load(w: int) -> float:
+            return sum(t.cost / self.speeds[w] for t in queues[w])
+
+        while remaining > 0:
+            now, w = heapq.heappop(heap)
+            task, stolen = None, False
+            if queues[w]:
+                task = queues[w].popleft()
+            elif self.steal:
+                victim = max((v for v in range(self.n) if queues[v]),
+                             key=queue_load, default=-1)
+                if victim >= 0:
+                    cand = queues[victim][-1]
+                    idle_pred = queue_load(victim) / 2.0
+                    if idle_pred > self.cm.steal_cost(cand):
+                        task = queues[victim].pop()
+                        stolen = True
+            if task is None:
+                # Retire this worker: queue loads are monotonically
+                # decreasing, so a steal that is unprofitable now (Eq. 6)
+                # stays unprofitable — no need to poll again.  Owners never
+                # retire with a non-empty queue, so progress is guaranteed.
+                finish[w] = max(finish[w], now)
+                continue
+            dur = task.cost / self.speeds[w]
+            if stolen:
+                dur += self.cm.steal_cost(task)
+                steals += 1
+            busy[w] += dur
+            finish[w] = now + dur
+            done_tasks[w] += 1
+            remaining -= 1
+            heapq.heappush(heap, (now + dur, w))
+
+        wall = max(finish)
+        mean_busy = statistics.mean(busy)
+        return {
+            "wall_s": wall,
+            "imbalance_pct": (100.0 * statistics.pstdev(busy)
+                              / max(mean_busy, 1e-12)),
+            "max_thread_s": max(busy),
+            "min_thread_s": min(busy),
+            "steals": steals,
+            "tasks": len(tasks),
+            "avg_tasks_per_worker": len(tasks) / self.n,
+            "per_worker_busy_s": busy,
+        }
+
+
+def phase_time(t_comp: float, t_comm: float, k: float, tau_s: float,
+               rho: float) -> float:
+    """Eq. 7: T_phase ~= max(T_comp, T_comm) + (1-rho) * k * tau_s."""
+    return max(t_comp, t_comm) + (1.0 - rho) * k * tau_s

@@ -1,0 +1,2 @@
+from .sharding import (MeshRules, ParamBuilder, param_pspecs, shard,
+                       to_named_shardings)

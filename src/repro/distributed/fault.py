@@ -1,0 +1,68 @@
+"""Straggler detection and elastic-mesh utilities.
+
+``StepWatchdog`` — flags steps (and, in multi-process deployments, ranks)
+whose duration exceeds ``tolerance`` x the rolling median; the training loop
+uses it to log stragglers and to trigger an early checkpoint when
+persistent slowdown suggests imminent preemption.
+
+``choose_mesh_shape`` — elastic scaling: given however many devices survive
+a failure, pick the largest (data, model) grid that (a) keeps the model
+axis at its required size and (b) wastes at most the remainder ranks.  The
+checkpoint layer's logical-axis storage makes the actual re-shard a
+device_put (see checkpoint/manager.py).
+"""
+from __future__ import annotations
+
+import collections
+import statistics
+import time
+from typing import Dict, List, Optional, Tuple
+
+
+class StepWatchdog:
+    def __init__(self, tolerance: float = 2.0, window: int = 32):
+        self.tolerance = tolerance
+        self.durations: collections.deque = collections.deque(maxlen=window)
+        self.flagged: List[Tuple[int, float]] = []
+        self._t0: Optional[float] = None
+        self._step = 0
+
+    def start(self, step: int) -> None:
+        self._step = step
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> Optional[float]:
+        """Returns the step duration; records a straggler flag if slow."""
+        if self._t0 is None:
+            return None
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        if len(self.durations) >= 8:
+            med = statistics.median(self.durations)
+            if dt > self.tolerance * med:
+                self.flagged.append((self._step, dt))
+        self.durations.append(dt)
+        return dt
+
+    @property
+    def median_s(self) -> Optional[float]:
+        return statistics.median(self.durations) if self.durations else None
+
+
+def choose_mesh_shape(n_devices: int, model_parallel: int,
+                      pod_size: Optional[int] = None) -> Tuple[int, ...]:
+    """Largest usable (pods?, data, model) grid for ``n_devices``.
+
+    model_parallel is fixed by the arch (TP degree); data absorbs the rest.
+    With ``pod_size`` given, devices group into full pods first.
+    """
+    if n_devices < model_parallel:
+        raise ValueError("not enough devices for the model-parallel degree")
+    if pod_size:
+        pods = n_devices // pod_size
+        if pods >= 2:
+            data = pod_size // model_parallel
+            return (pods, data, model_parallel)
+        n_devices = min(n_devices, pod_size)
+    data = n_devices // model_parallel
+    return (data, model_parallel)

@@ -1,0 +1,334 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Methodology (documented in EXPERIMENTS.md §Roofline):
+
+* ``compiled.cost_analysis()`` gives per-device FLOPs and bytes, BUT XLA
+  counts a ``while`` (lax.scan) body ONCE, not trip-count times.  All our
+  models scan over layer super-blocks (and flash attention scans over
+  blocks), so raw cost_analysis badly undercounts.  We therefore:
+    - parse the post-SPMD HLO, walk the computation graph, and multiply
+      everything inside a while body by its trip count (read from the loop
+      condition's comparison constant) — this yields *collective bytes* and
+      a trip-count-corrected flop estimate;
+    - cross-check against the analytic per-arch cost model
+      (``repro.models.costs``), which provides MODEL_FLOPS = 6*N*D and the
+      full compiled-graph flop prediction.
+
+* Collective wire-bytes per chip use ring multipliers:
+    all-reduce 2(n-1)/n, all-gather/all-to-all/reduce-scatter (n-1)/n (on
+    the transferred payload), collective-permute 1.
+  The headline collective term follows the assignment's formula
+  (operand bytes / link_bw); wire bytes are reported alongside.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "all-to-all", "reduce-scatter",
+                "collective-permute")
+
+_WIRE_MULT = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / max(n, 1),
+    "all-gather": lambda n: (n - 1) / max(n, 1),
+    "all-to-all": lambda n: (n - 1) / max(n, 1),
+    "reduce-scatter": lambda n: (n - 1) / max(n, 1),
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[128,256]' or '(f32[2], bf16[4,4])' -> total bytes."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([0-9,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        elems = 1
+        if dims:
+            for d in dims.split(","):
+                elems *= int(d)
+        total += elems * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes_out: int
+    group_size: int
+    count: float      # trip-count multiplier
+
+    @property
+    def operand_bytes(self) -> float:
+        return self.bytes_out * self.count
+
+    @property
+    def wire_bytes(self) -> float:
+        return self.bytes_out * self.count * _WIRE_MULT[self.kind](self.group_size)
+
+
+def _group_size(attrs: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def parse_hlo_collectives(hlo: str, n_devices: int
+                          ) -> Tuple[List[CollectiveOp], Dict[str, float]]:
+    """Walk the HLO computation graph, multiplying while-body contents by
+    trip counts.  Returns (collective ops, per-kind operand-byte totals)."""
+    # --- split into computations -------------------------------------------
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = re.match(r"^(?:ENTRY )?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$",
+                     line)
+        if m and ("->" in line or line.startswith("ENTRY")):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line.strip())
+
+    entry = None
+    for m in re.finditer(r"^ENTRY %?([\w\.\-]+)", hlo, re.M):
+        entry = m.group(1)
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO")
+
+    def trip_count(cond_name: str) -> float:
+        """Read the comparison constant from a while-loop condition."""
+        best = None
+        for line in comps.get(cond_name, []):
+            for m in re.finditer(r"constant\((\d+)\)", line):
+                v = int(m.group(1))
+                if best is None or v > best:
+                    best = v
+        return float(best) if best else 1.0
+
+    collectives: List[CollectiveOp] = []
+
+    def walk(comp: str, mult: float, seen_depth: int = 0) -> None:
+        if seen_depth > 64:
+            return
+        for line in comps.get(comp, []):
+            shape_m = re.match(
+                r"(?:ROOT )?%?[\w\.\-]+ = (\([^)]*\)|[^ ]+) ([\w\-]+)\(",
+                line)
+            if not shape_m:
+                continue
+            shape_str, op = shape_m.group(1), shape_m.group(2)
+            if op in _COLLECTIVES or any(
+                    op.startswith(c + "-") for c in _COLLECTIVES):
+                base = op if op in _COLLECTIVES else \
+                    next(c for c in _COLLECTIVES if op.startswith(c + "-"))
+                collectives.append(CollectiveOp(
+                    kind=base,
+                    bytes_out=_shape_bytes(shape_str),
+                    group_size=_group_size(line, n_devices),
+                    count=mult))
+            if op == "while":
+                cm = re.search(r"condition=%?([\w\.\-]+)", line)
+                bm = re.search(r"body=%?([\w\.\-]+)", line)
+                if cm and bm:
+                    tc = trip_count(cm.group(1))
+                    walk(bm.group(1), mult * tc, seen_depth + 1)
+            elif op == "fusion":
+                fm = re.search(r"calls=%?([\w\.\-]+)", line)
+                if fm:
+                    walk(fm.group(1), mult, seen_depth + 1)
+            elif op in ("call", "custom-call"):
+                tm = re.search(r"to_apply=%?([\w\.\-]+)", line)
+                if tm:
+                    walk(tm.group(1), mult, seen_depth + 1)
+            elif op == "conditional":
+                for bm in re.finditer(r"%([\w\.\-]+)", line):
+                    if bm.group(1).startswith(("region", "branch")):
+                        walk(bm.group(1), mult, seen_depth + 1)
+
+    walk(entry, 1.0)
+    per_kind: Dict[str, float] = defaultdict(float)
+    for c in collectives:
+        per_kind[c.kind] += c.operand_bytes
+    return collectives, dict(per_kind)
+
+
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "while", "call", "conditional", "after-all",
+             "partition-id", "replica-id", "iota", "bitcast-convert"}
+
+
+def estimate_hbm_bytes(hlo: str, n_devices: int) -> float:
+    """Trip-count-aware per-chip HBM traffic estimate.
+
+    Walks ENTRY plus while/conditional bodies (multiplying by trip counts),
+    summing output + operand bytes of every top-level op.  Fusion interiors
+    are NOT walked — post-fusion, a fusion op's operands/outputs are exactly
+    its HBM traffic.  This corrects cost_analysis' two failure modes for
+    our models: while bodies counted once, and fusion-interior ops counted
+    as if each touched HBM.
+    """
+    # global symbol table: op name -> output bytes (names are module-unique)
+    sym: Dict[str, int] = {}
+    op_re = re.compile(r"%([\w\.\-]+) = (\([^)]*\)|[^ ]+) ([\w\-]+)\(")
+    for line in hlo.splitlines():
+        m = op_re.search(line)
+        if m:
+            sym[m.group(1)] = _shape_bytes(m.group(2))
+
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = re.match(r"^(?:ENTRY )?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$",
+                     line)
+        if m and ("->" in line or line.startswith("ENTRY")):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line.strip())
+
+    entry = None
+    for m in re.finditer(r"^ENTRY %?([\w\.\-]+)", hlo, re.M):
+        entry = m.group(1)
+    if entry is None:
+        return 0.0
+
+    def trip_count(cond_name: str) -> float:
+        best = None
+        for line in comps.get(cond_name, []):
+            for m in re.finditer(r"constant\((\d+)\)", line):
+                v = int(m.group(1))
+                if best is None or v > best:
+                    best = v
+        return float(best) if best else 1.0
+
+    total = 0.0
+
+    def walk(comp: str, mult: float, depth: int = 0) -> None:
+        nonlocal total
+        if depth > 64:
+            return
+        for line in comps.get(comp, []):
+            m = op_re.search(line)
+            if not m:
+                continue
+            name, shape_str, op = m.groups()
+            if op == "while":
+                cm = re.search(r"condition=%?([\w\.\-]+)", line)
+                bm = re.search(r"body=%?([\w\.\-]+)", line)
+                if cm and bm:
+                    walk(bm.group(1), mult * trip_count(cm.group(1)),
+                         depth + 1)
+                continue
+            if op == "conditional":
+                for bm in re.finditer(r"(?:true_computation|false_computation"
+                                      r")=%?([\w\.\-]+)", line):
+                    walk(bm.group(1), mult, depth + 1)
+                continue
+            if op in _FREE_OPS:
+                continue
+            out_b = _shape_bytes(shape_str)
+            opnd_b = 0
+            am = re.search(r"\(([^)]*)\)", line[m.end() - 1:])
+            if am:
+                for t in re.finditer(r"%([\w\.\-]+)", am.group(1)):
+                    opnd_b += sym.get(t.group(1), 0)
+            total += (out_b + opnd_b) * mult
+
+    walk(entry, 1.0)
+    return total
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_chip: float          # analytic, trip-count-correct
+    hbm_bytes_per_chip: float
+    coll_operand_bytes_per_chip: float
+    coll_wire_bytes_per_chip: float
+    model_flops_total: float       # 6*N*D (active) for the workload
+    chips: int
+    min_hbm_bytes_total: float = 0.0   # analytic floor (params/opt/cache)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_operand_bytes_per_chip / LINK_BW
+
+    @property
+    def t_collective_wire(self) -> float:
+        return self.coll_wire_bytes_per_chip / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        total = self.flops_per_chip * self.chips
+        return self.model_flops_total / total if total else 0.0
+
+    @property
+    def t_ideal(self) -> float:
+        """The unavoidable step time: useful flops at peak OR the mandatory
+        HBM traffic (params/moments/caches read+written once) at full
+        bandwidth, whichever binds.  Decode steps are legitimately memory-
+        bound, so a pure-compute ideal would misread them as 0%-efficient."""
+        t_flops = (self.model_flops_total / self.chips) / PEAK_FLOPS
+        t_bytes = (self.min_hbm_bytes_total / self.chips) / HBM_BW
+        return max(t_flops, t_bytes)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the roofline the step achieves with perfect overlap:
+        ideal time / max(three terms)."""
+        actual = max(self.t_compute, self.t_memory, self.t_collective)
+        return self.t_ideal / actual if actual > 0 else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "t_collective_wire_s": self.t_collective_wire,
+            "t_ideal_s": self.t_ideal,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops_total,
+            "hlo_flops_per_chip": self.flops_per_chip,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }

@@ -1,0 +1,131 @@
+"""Sharding rules + parameter builder for the production mesh.
+
+Logical axes used throughout the model code:
+
+  "fsdp"   — parameter/optimizer sharding axis(es): ("data",) on one pod,
+             ("pod", "data") across pods (ZeRO-3 style).
+  "tp"     — tensor-parallel axis ("model"): attention head projections,
+             FFN columns, MoE experts, vocab.
+  "batch"  — data-parallel batch axis(es) == fsdp axes.
+  "seq"    — sequence sharding for long-context KV caches (decode SP).
+
+Every parameter is created through ``ParamBuilder.param`` which (a) derives
+a deterministic per-path RNG key, (b) records the PartitionSpec so the whole
+spec tree can be rebuilt for pjit in/out shardings, and (c) never allocates
+when traced under ``jax.eval_shape`` (the dry-run path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """Maps logical axis names to physical mesh axes.
+
+    ``fsdp`` may be empty (serving layout: params replicated over the data
+    axes, sharded only over "model" — no per-step parameter all-gathers);
+    ``batch_axes`` stays populated so activations/caches remain data-sharded.
+    """
+    fsdp: Tuple[str, ...] = ("data",)
+    tp: str = "model"
+    batch_axes: Optional[Tuple[str, ...]] = None
+
+    @property
+    def batch(self) -> Tuple[str, ...]:
+        return self.batch_axes if self.batch_axes is not None else self.fsdp
+
+    @staticmethod
+    def _axis(axes: Tuple[str, ...]):
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    def resolve(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        if logical == "fsdp":
+            return self._axis(self.fsdp)
+        if logical == "tp":
+            return self.tp
+        if logical == "batch":
+            return self._axis(self.batch)
+        raise ValueError(f"unknown logical axis {logical!r}")
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return P(*(self.resolve(l) for l in logical))
+
+    @staticmethod
+    def for_mesh(mesh: Mesh) -> "MeshRules":
+        names = tuple(mesh.axis_names)
+        if "pod" in names:
+            return MeshRules(fsdp=("pod", "data"))
+        return MeshRules(fsdp=("data",))
+
+
+def shard(x: jax.Array, rules: MeshRules, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op outside jit/mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, rules.spec(*logical))
+    except (ValueError, RuntimeError):
+        return x  # no mesh context (pure-CPU smoke tests)
+
+
+class ParamBuilder:
+    """Creates parameters and records their PartitionSpecs by path."""
+
+    def __init__(self, key: jax.Array, rules: MeshRules,
+                 dtype=jnp.float32):
+        self.key = key
+        self.rules = rules
+        self.dtype = dtype
+        self.specs: Dict[str, P] = {}
+
+    def param(self, path: str, shape: Sequence[int],
+              logical: Sequence[Optional[str]], init: str = "normal",
+              scale: float = 0.02) -> jax.Array:
+        if len(logical) != len(shape):
+            raise ValueError(f"{path}: logical axes {logical} vs shape {shape}")
+        self.specs[path] = self.rules.spec(*logical)
+        key = jax.random.fold_in(self.key, zlib.crc32(path.encode()))
+        out = self._build(key, tuple(shape), init, scale)
+        if tuple(out.shape) != tuple(shape):
+            raise ValueError(f"{path}: built shape {out.shape} != declared "
+                             f"{tuple(shape)}")
+        return out
+
+    def _build(self, key, shape, init, scale):
+        if init == "normal":
+            return (jax.random.normal(key, tuple(shape), jnp.float32)
+                    * scale).astype(self.dtype)
+        if init == "zeros":
+            return jnp.zeros(tuple(shape), self.dtype)
+        if init == "ones":
+            return jnp.ones(tuple(shape), self.dtype)
+        if init == "mamba_a":
+            # S4D-real initialization: A = -(1..d_state) along the last dim,
+            # broadcast over all leading (stack, channel) dims
+            a = jnp.arange(1, shape[-1] + 1, dtype=jnp.float32)
+            return jnp.broadcast_to(jnp.log(a),
+                                    tuple(shape)).astype(self.dtype)
+        raise ValueError(f"unknown init {init!r}")
+
+
+def param_pspecs(builder: ParamBuilder, params) -> object:
+    """Rebuild the PartitionSpec tree parallel to ``params`` from the
+    builder's recorded path->spec map."""
+    def lookup(kp, _):
+        path = "/".join(str(getattr(k, "key", k)) for k in kp)
+        return builder.specs[path]
+    return jax.tree_util.tree_map_with_path(lookup, params)
+
+
+def to_named_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,40 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``fft1d`` / ``ifft1d`` take complex arrays of any rank and transform along
+``axis`` using the MXU four-step kernel; they are drop-in replacements for
+``jnp.fft.fft`` in the core pipeline (``backend="pallas"`` would route here
+on real TPUs — the shipped pipeline defaults to the pure-jnp matmul path,
+which compiles to the same MXU contractions, because ``interpret=True``
+Pallas execution is Python-speed on this CPU container).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .fft_matmul import fft1d_planes
+
+
+def _apply(x: jax.Array, axis: int, *, inverse: bool,
+           interpret: bool = True) -> jax.Array:
+    axis = axis % x.ndim
+    xm = jnp.moveaxis(x, axis, -1)
+    lead = xm.shape[:-1]
+    n = xm.shape[-1]
+    flat_r = jnp.real(xm).reshape(-1, n)
+    flat_i = jnp.imag(xm).reshape(-1, n) if jnp.iscomplexobj(xm) \
+        else jnp.zeros_like(flat_r)
+    outr, outi = fft1d_planes(flat_r, flat_i, inverse=inverse,
+                              interpret=interpret)
+    out = jax.lax.complex(outr, outi).reshape(lead + (n,))
+    return jnp.moveaxis(out, -1, axis)
+
+
+def fft1d(x: jax.Array, axis: int = -1, *, interpret: bool = True) -> jax.Array:
+    """Forward FFT along ``axis`` via the Pallas MXU kernel."""
+    return _apply(x, axis, inverse=False, interpret=interpret)
+
+
+def ifft1d(x: jax.Array, axis: int = -1, *, interpret: bool = True) -> jax.Array:
+    """Inverse FFT along ``axis`` via the Pallas MXU kernel."""
+    return _apply(x, axis, inverse=True, interpret=interpret)

@@ -1,0 +1,257 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell, record memory/cost analyses, the collective schedule and the
+roofline terms.  MUST be run as a module entry point (never import this
+from tests — it forces 512 host devices before jax initializes).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --fft            # FFT grids
+
+Artifacts: one JSON per cell under artifacts/dryrun/.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, CANONICAL, applicable_shapes, get_config
+from repro.distributed.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS,
+                                        RooflineTerms, estimate_hbm_bytes,
+                                        parse_hlo_collectives)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.models.config import SHAPES
+from repro.models.costs import step_flops
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
+                overrides=None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+
+    # big models: bf16 params + bf16 moments to fit the HBM budget
+    big = cfg.name.startswith(("llama4", "jamba"))
+    param_dtype = jnp.bfloat16 if big else jnp.float32
+    from repro.optim.adamw import AdamWConfig
+    opt_cfg = AdamWConfig(moment_dtype="bfloat16" if big else "float32")
+
+    t0 = time.perf_counter()
+    cell = build_cell(cfg, shape, mesh, opt_cfg=opt_cfg,
+                      param_dtype=param_dtype)
+    with mesh:
+        lowered = cell.jitted.lower(*cell.abstract_args)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    collectives, per_kind = parse_hlo_collectives(hlo, n_dev)
+    coll_operand = sum(c.operand_bytes for c in collectives)
+    coll_wire = sum(c.wire_bytes for c in collectives)
+
+    flops = step_flops(cfg, shape, remat=(shape.kind == "train"))
+    # Memory term: XLA's "bytes accessed" counts while bodies once (under-
+    # count for scanned stacks); the analytic floor (mandatory params/
+    # moments/cache traffic) bounds from below.  Take the max; the raw HLO
+    # walker stays available as a diagnostic (overcounts loop operands).
+    hbm = max(float(cost.get("bytes accessed", 0.0)),
+              flops["min_hbm_bytes"] / n_dev)
+    terms = RooflineTerms(
+        flops_per_chip=flops["total"] / n_dev,
+        hbm_bytes_per_chip=hbm,
+        coll_operand_bytes_per_chip=coll_operand,
+        coll_wire_bytes_per_chip=coll_wire,
+        model_flops_total=flops["model_flops"],
+        chips=n_dev,
+        min_hbm_bytes_total=flops["min_hbm_bytes"],
+    )
+
+    out = {
+        "arch": cfg.name,
+        "shape": shape_name,
+        "mesh": list(mesh.devices.shape),
+        "mesh_axes": list(mesh.axis_names),
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "alias_bytes_per_device": mem.alias_size_in_bytes,
+            "peak_bytes_per_device": (mem.argument_size_in_bytes
+                                      + mem.output_size_in_bytes
+                                      + mem.temp_size_in_bytes
+                                      - mem.alias_size_in_bytes),
+        },
+        "cost_analysis": {
+            "flops_per_device_hlo": float(cost.get("flops", 0.0)),
+            "bytes_accessed_per_device": float(cost.get("bytes accessed", 0.0)),
+            "note": "XLA counts while-loop bodies once; see analytic terms",
+        },
+        "collectives": {
+            "per_kind_operand_bytes": per_kind,
+            "operand_bytes_per_chip": coll_operand,
+            "wire_bytes_per_chip": coll_wire,
+            "n_ops": len(collectives),
+        },
+        "analytic": {
+            "flops_total": flops["total"],
+            "flops_forward": flops["forward"],
+            "model_flops": flops["model_flops"],
+            "params_total": flops["params_total"],
+            "params_active": flops["params_active"],
+        },
+        "roofline": terms.summary(),
+    }
+    return out
+
+
+def run_and_save(arch, shape_name, multi_pod, overrides=None):
+    tag = "pod2" if multi_pod else "pod1"
+    os.makedirs(ART_DIR, exist_ok=True)
+    fname = os.path.join(ART_DIR, f"{CANONICAL.get(arch, arch)}.{shape_name}.{tag}.json")
+    try:
+        out = dryrun_cell(arch, shape_name, multi_pod=multi_pod,
+                          overrides=overrides)
+        out["status"] = "ok"
+    except Exception as e:
+        out = {"arch": arch, "shape": shape_name, "mesh_tag": tag,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-4000:]}
+    with open(fname, "w") as f:
+        json.dump(out, f, indent=1)
+    status = out["status"]
+    extra = "" if status == "ok" else out["error"][:120]
+    print(f"[dryrun] {arch} x {shape_name} x {tag}: {status} "
+          f"compile={out.get('compile_s', '-')}s {extra}", flush=True)
+    return out
+
+
+def dryrun_fft(grid, decomp, *, multi_pod: bool, n_chunks: int = 1,
+               backend: str = "xla"):
+    """Dry-run the paper's own FFT pipeline on the production mesh."""
+    from repro.core import make_decomposition, make_spec, build_pipeline
+    from jax.sharding import NamedSharding
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    axes = ("data", "model") if decomp == "pencil" else ("model",)
+    dec = make_decomposition(decomp, axes)
+    spec = make_spec(mesh, grid, dec, ("fft",) * 3, backend=backend,
+                     n_chunks=n_chunks)
+    batch = (2,) if multi_pod else ()
+    bspec = ("pod",) if multi_pod else ()
+    import dataclasses as dc
+    spec = dc.replace(spec, batch_spec=tuple(bspec))
+    arg = jax.ShapeDtypeStruct(
+        tuple(batch) + tuple(grid), jnp.complex64,
+        sharding=NamedSharding(mesh, spec.in_spec()))
+    t0 = time.perf_counter()
+    with mesh:
+        lowered = jax.jit(build_pipeline(mesh, spec)).lower(arg)
+        compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    collectives, per_kind = parse_hlo_collectives(hlo, n_dev)
+
+    from repro.core.perfmodel import fft_total_flops
+    n_batch = batch[0] if batch else 1
+    flops = fft_total_flops(grid) * n_batch
+    terms = RooflineTerms(
+        flops_per_chip=flops / n_dev,
+        hbm_bytes_per_chip=float(cost.get("bytes accessed", 0.0)),
+        coll_operand_bytes_per_chip=sum(c.operand_bytes for c in collectives),
+        coll_wire_bytes_per_chip=sum(c.wire_bytes for c in collectives),
+        model_flops_total=flops,
+        chips=n_dev,
+    )
+    return {
+        "arch": f"fft{grid[0]}_{decomp}"
+                + (f"_c{n_chunks}" if n_chunks > 1 else "")
+                + (f"_{backend}" if backend != "xla" else ""),
+        "shape": "x".join(map(str, grid)),
+        "mesh": list(mesh.devices.shape),
+        "compile_s": round(t_compile, 2),
+        "n_chunks": n_chunks,
+        "backend": backend,
+        "memory": {"peak_bytes_per_device": (mem.argument_size_in_bytes
+                                             + mem.output_size_in_bytes
+                                             + mem.temp_size_in_bytes
+                                             - mem.alias_size_in_bytes)},
+        "cost_analysis": {
+            "flops_per_device_hlo": float(cost.get("flops", 0.0)),
+            "bytes_accessed_per_device": float(cost.get("bytes accessed", 0.0))},
+        "collectives": {"per_kind_operand_bytes": per_kind,
+                        "n_ops": len(collectives),
+                        "operand_bytes_per_chip": sum(
+                            c.operand_bytes for c in collectives),
+                        "wire_bytes_per_chip": sum(
+                            c.wire_bytes for c in collectives)},
+        "roofline": terms.summary(),
+        "status": "ok",
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fft", action="store_true")
+    ap.add_argument("--fft-grid", type=int, default=512)
+    ap.add_argument("--fft-decomp", type=str, default="pencil")
+    ap.add_argument("--n-chunks", type=int, default=1)
+    ap.add_argument("--backend", type=str, default="xla")
+    args = ap.parse_args()
+
+    if args.fft:
+        os.makedirs(ART_DIR, exist_ok=True)
+        grid = (args.fft_grid,) * 3
+        out = dryrun_fft(grid, args.fft_decomp, multi_pod=args.multi_pod,
+                         n_chunks=args.n_chunks, backend=args.backend)
+        tag = "pod2" if args.multi_pod else "pod1"
+        fn = os.path.join(ART_DIR, f"{out['arch']}.{out['shape']}.{tag}.json")
+        with open(fn, "w") as f:
+            json.dump(out, f, indent=1)
+        print(json.dumps(out["roofline"], indent=1))
+        return
+
+    if args.all:
+        for arch in ARCHS:
+            cfg = get_config(arch)
+            for shape_name in applicable_shapes(cfg):
+                run_and_save(arch, shape_name, args.multi_pod)
+        return
+
+    assert args.arch and args.shape, "--arch and --shape (or --all / --fft)"
+    out = run_and_save(args.arch, args.shape, args.multi_pod)
+    if out["status"] == "ok":
+        print(json.dumps(out["roofline"], indent=1))
+    else:
+        print(out.get("trace", "")[-2000:])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,300 @@
+"""Step builders: train / prefill / decode, with sharding trees.
+
+These are the jit roots the launcher and the dry-run lower.  Everything is
+shape-driven: ``abstract_state`` builds the parameter tree via eval_shape
+(no allocation) together with its PartitionSpec tree; ``input_specs``
+produces ShapeDtypeStruct stand-ins for every model input, matching the
+assignment's dry-run contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (MeshRules, ParamBuilder,
+                                        param_pspecs, to_named_shardings)
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig, SHAPES, ShapeConfig
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compress import bf16_compress
+
+
+# ---------------------------------------------------------------------------
+# abstract state + specs
+# ---------------------------------------------------------------------------
+
+def build_params(cfg: ModelConfig, rules: MeshRules, *, abstract: bool,
+                 seed: int = 0, param_dtype=jnp.float32):
+    builder = ParamBuilder(jax.random.key(seed), rules, dtype=param_dtype)
+    if abstract:
+        params = jax.eval_shape(lambda: tfm.init_model(builder, cfg))
+    else:
+        params = tfm.init_model(builder, cfg)
+    pspecs = param_pspecs(builder, params)
+    return params, pspecs
+
+
+def opt_pspecs(params_pspecs) -> Dict[str, Any]:
+    return {"m": params_pspecs, "v": params_pspecs, "count": P()}
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig,
+                 rules: MeshRules) -> Dict[str, P]:
+    from repro.data.pipeline import batch_specs
+    specs = batch_specs(cfg, shape, rules)
+    if shape.global_batch == 1:
+        specs = {k: P(*((None,) * len(v))) for k, v in specs.items()}
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                rules: MeshRules) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the data inputs of one cell."""
+    b, s = shape.global_batch, shape.seq_len
+    specs = batch_pspecs(cfg, shape, rules)
+
+    def sds(shp, dt, spec):
+        return jax.ShapeDtypeStruct(shp, dt, sharding=NamedSharding(mesh, spec))
+
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        out["tokens"] = sds((b, s), jnp.int32, specs["tokens"])
+        out["labels"] = sds((b, s), jnp.int32, specs["labels"])
+    elif shape.kind == "prefill":
+        out["tokens"] = sds((b, s), jnp.int32, specs["tokens"])
+    else:  # decode: one new token
+        out["tokens"] = sds((b, 1), jnp.int32, specs["tokens"])
+    if cfg.modality is not None and shape.kind != "decode":
+        n = s if cfg.modality == "audio" else min(cfg.n_modality_tokens, s)
+        out["modality_embeds"] = sds((b, n, cfg.d_model), jnp.float32,
+                                     specs["modality_embeds"])
+    return out
+
+
+def cache_state(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                rules: MeshRules, *, abstract: bool = True):
+    """(cache tree or ShapeDtypeStructs, cache pspec tree) for decode."""
+    b, s = shape.global_batch, shape.seq_len
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    make_spec = tfm.cache_pspec(cfg, rules, b, axis_sizes)
+    caches = jax.eval_shape(lambda: tfm.init_caches(cfg, b, s))
+    specs = make_spec(caches)
+    if abstract:
+        shardings = to_named_shardings(mesh, specs)
+        caches = jax.tree.map(
+            lambda sd, sh: jax.ShapeDtypeStruct(sd.shape, sd.dtype,
+                                                sharding=sh),
+            caches, shardings)
+    else:
+        caches = jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), caches)
+    return caches, specs
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits: jax.Array, labels: jax.Array, vocab: int) -> jax.Array:
+    """Mean CE over tokens; padded-vocab logits masked out."""
+    v_pad = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    if v_pad > vocab:
+        pad_mask = jnp.arange(v_pad) >= vocab
+        lf = jnp.where(pad_mask[None, None, :], -1e30, lf)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def chunked_lm_loss(hidden: jax.Array, head_w: jax.Array,
+                    labels: jax.Array, vocab: int,
+                    chunk: int = 512) -> jax.Array:
+    """Fused head-matmul + CE, scanned over sequence chunks.
+
+    Never materializes the full (B, S, V) logits: each checkpointed chunk
+    computes (B, chunk, V), reduces to per-token losses, and is recomputed
+    in backward.  On llama4's 202k padded vocab the unfused CE held
+    ~11 GiB/device of f32 logits copies (§Perf G9).
+    """
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s  # fallback (tiny smoke shapes)
+    nc = s // chunk
+    hc = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+    v_pad = head_w.shape[-1]
+    pad_mask = jnp.arange(v_pad) >= vocab if v_pad > vocab else None
+
+    @jax.checkpoint
+    def one_chunk(carry, inp):
+        h, lab = inp
+        logits = (h @ head_w.astype(h.dtype)).astype(jnp.float32)
+        if pad_mask is not None:
+            logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(one_chunk, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, rules: MeshRules,
+                    opt_cfg: AdamWConfig, *, remat: bool = True,
+                    grad_compress: bool = True, pspecs=None,
+                    accum_steps: int = 1):
+    """accum_steps > 1 runs gradient accumulation over sequential
+    micro-batches (the per-microbatch activation working set shrinks
+    accum_steps-fold; grads accumulate in bf16, the f32 master update
+    happens once in AdamW).  The standard fit for 400B-class training."""
+
+    def loss_fn(params, batch):
+        (hidden, head_w), _, aux = tfm.forward(
+            params, cfg, rules, batch, mode="train", remat=remat,
+            pspecs=pspecs, return_hidden=True)
+        loss = chunked_lm_loss(hidden, head_w, batch["labels"], cfg.vocab)
+        return loss + cfg.router_aux_coef * aux, (loss, aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (_, (loss, aux)), grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]).swapaxes(0, 0),
+                batch)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                (_, (l, a)), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda ga, gg: ga + gg.astype(ga.dtype), g_acc, g)
+                return (g_acc, l_acc + l, a_acc + a), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16),
+                              params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                acc_step, (g0, jnp.zeros((), jnp.float32),
+                           jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+            aux = aux / accum_steps
+        if grad_compress:
+            # halve the DP reduce-scatter bytes; f32 re-accumulation inside
+            # the optimizer keeps the update exact to bf16 rounding
+            grads = bf16_compress(grads)
+        new_params, new_opt = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics = {"loss": loss, "aux_loss": aux}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, rules: MeshRules, pspecs=None):
+    def prefill_step(params, batch):
+        logits, caches, _ = tfm.forward(params, cfg, rules, batch,
+                                        mode="prefill", remat=False,
+                                        pspecs=pspecs)
+        return logits[:, -1], caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, rules: MeshRules, pspecs=None):
+    def decode_step(params, caches, tokens, pos):
+        batch = {"tokens": tokens}
+        positions = pos[None]  # (1,) absolute position of the new token
+        logits, new_caches, _ = tfm.forward(
+            params, cfg, rules, batch, mode="decode", caches=caches,
+            positions=positions, remat=False, pspecs=pspecs)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)
+        return next_tok, logits[:, -1], new_caches
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# jit assembly for one (arch x shape x mesh) cell
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CellProgram:
+    kind: str
+    jitted: Any
+    abstract_args: Tuple
+    donate: Tuple[int, ...]
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+               opt_cfg: Optional[AdamWConfig] = None,
+               remat: bool = True, grad_compress: bool = True,
+               param_dtype=jnp.float32,
+               decode_param_sharding: str = "auto") -> CellProgram:
+    """Assemble the jitted step + abstract inputs for one dry-run cell.
+
+    decode_param_sharding: "fsdp" keeps the training layout (params gathered
+    over the data axis every step — collective-heavy); "tp_only" replicates
+    params over data and shards only over "model" (no per-step parameter
+    collectives — right for serving when params/|model| fits HBM); "auto"
+    picks tp_only for decode cells whose TP-sharded params fit ~8 GiB.
+    """
+    rules = MeshRules.for_mesh(mesh)
+    if shape.kind == "decode" and decode_param_sharding != "fsdp":
+        from repro.models.costs import param_counts
+        tp = mesh.devices.shape[-1]
+        pbytes = 2 if param_dtype == jnp.bfloat16 else 4
+        per_dev = param_counts(cfg)["total"] * pbytes / tp
+        if decode_param_sharding == "tp_only" or per_dev < 8 * 2 ** 30:
+            rules = MeshRules(fsdp=(), tp="model",
+                              batch_axes=rules.batch)
+    params, pspecs = build_params(cfg, rules, abstract=True,
+                                  param_dtype=param_dtype)
+    p_shard = to_named_shardings(mesh, pspecs)
+    params_abs = jax.tree.map(
+        lambda sd, sh: jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=sh),
+        params, p_shard)
+    data = input_specs(cfg, shape, mesh, rules)
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        opt_abs = jax.eval_shape(partial(adamw_init, cfg=opt_cfg), params_abs)
+        o_shard = to_named_shardings(mesh, opt_pspecs(pspecs))
+        opt_abs = jax.tree.map(
+            lambda sd, sh: jax.ShapeDtypeStruct(sd.shape, sd.dtype,
+                                                sharding=sh),
+            opt_abs, o_shard)
+        # 400B-class: 4 sequential micro-batches shrink the activation
+        # working set to fit the 16 GiB v5e budget (§Perf G9)
+        accum = 4 if (cfg.name.startswith("llama4")
+                      and shape.global_batch % 4 == 0) else 1
+        step = make_train_step(cfg, rules, opt_cfg, remat=remat,
+                               grad_compress=grad_compress, pspecs=pspecs,
+                               accum_steps=accum)
+        jitted = jax.jit(step, donate_argnums=(0, 1))
+        return CellProgram("train", jitted, (params_abs, opt_abs, data),
+                           (0, 1))
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, rules, pspecs=pspecs)
+        jitted = jax.jit(step)
+        return CellProgram("prefill", jitted, (params_abs, data), ())
+
+    # decode
+    caches_abs, _ = cache_state(cfg, shape, mesh, rules, abstract=True)
+    step = make_decode_step(cfg, rules, pspecs=pspecs)
+    jitted = jax.jit(step, donate_argnums=(1,))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return CellProgram("decode", jitted,
+                       (params_abs, caches_abs, data["tokens"], pos), (1,))

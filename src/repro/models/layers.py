@@ -1,0 +1,321 @@
+"""Transformer building blocks: norms, RoPE, GQA attention, SwiGLU MLP.
+
+Attention supports four execution modes sharing one parameter set:
+  train    — full-sequence causal (or windowed / bidirectional) attention,
+             computed flash-style in (q-block, kv-block) tiles with an online
+             softmax so 32k-token prefill never materializes an S^2 score
+             matrix.
+  prefill  — train-mode compute + returns the populated KV cache.
+  decode   — one new token against a cache; for sliding-window attention the
+             cache is a ring buffer of ``window`` slots, which is what makes
+             500k-token decode feasible for SWA models.
+  cross    — enc-dec cross attention (cache filled once from encoder output).
+
+All matmuls accumulate in f32; activations run in the config dtype (bf16 on
+TPU).  Sharding is annotated with logical axes (see distributed/sharding.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import MeshRules, ParamBuilder, shard
+from .config import ModelConfig
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# norms / embeddings / rope
+# ---------------------------------------------------------------------------
+
+def init_norm(b: ParamBuilder, path: str, d: int) -> Dict:
+    return {"scale": b.param(f"{path}/scale", (d,), (None,), init="ones")}
+
+
+def rms_norm(x: jax.Array, p: Dict, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, N, Hd); cos/sin: (B, S, half) or (S, half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None]
+        sin = sin[None]
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash-style tiled attention (no S^2 materialization)
+# ---------------------------------------------------------------------------
+
+def _flash_attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool, window: Optional[int],
+                  q_offset: int | jax.Array = 0,
+                  softcap: Optional[float] = None,
+                  rules: Optional[MeshRules] = None,
+                  q_block: int = 256, kv_block: int = 1024) -> jax.Array:
+    """q/k/v: (B, S, H, Hd) MHA layout -> (B, Sq, H, Hd).
+
+    GQA callers expand k/v to the full head count FIRST: the expanded
+    copies are cheap (sharded over "model" on H) and — crucially — give
+    GSPMD a head dim divisible by the TP axis, so the O(S*block) flash
+    intermediates shard 16x instead of replicating (the 28 GiB/device
+    all-attention blow-up in §Perf iteration 4).
+
+    Online-softmax over kv blocks (lax.scan); q blocks via a second scan.
+    ``q_offset`` is the absolute position of q[0] (prefill continuation).
+    """
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    # pad to block multiples
+    pq = (-sq) % q_block
+    pk = (-skv) % kv_block
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nkv = q.shape[1] // q_block, k.shape[1] // kv_block
+    scale = 1.0 / math.sqrt(hd)
+
+    def cshard(x):
+        return shard(x, rules, "batch", None, "tp", None) if rules else x
+
+    qb = cshard(q).reshape(b, nq, q_block, h, hd)
+    kb = cshard(k).reshape(b, nkv, kv_block, h, hd)
+    vb = cshard(v).reshape(b, nkv, kv_block, h, hd)
+
+    def hshard(x):  # (B, H, ...) block intermediates: shard H over tp
+        if rules is None:
+            return x
+        return shard(x, rules, "batch", "tp", *((None,) * (x.ndim - 2)))
+
+    @jax.checkpoint
+    def q_step(_, qi):
+        # checkpointed: backward recomputes this q-block's kv sweep instead
+        # of storing every block's (B,H,qb,kvb) score tensor — without this
+        # the flash backward materializes the full S^2 scores (8.6 GiB per
+        # layer on qwen3 train_4k; §Perf iteration 4)
+        qblk = qb[:, qi]                       # (B, qb, H, Hd)
+        qpos = q_offset + qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, kj):
+            o, m, l = carry
+            kblk = kb[:, kj]                   # (B, kb, H, Hd)
+            vblk = vb[:, kj]
+            s = jnp.einsum("bqhd,bthd->bhqt", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            kpos = kj * kv_block + jnp.arange(kv_block)
+            mask = jnp.ones((q_block, kv_block), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            if pk:
+                mask &= (kpos < skv)[None, :]
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqt,bthd->bhqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            # NOTE: no sharding constraint on the scan carry — an in-loop
+            # constraint forces a reshard every kv iteration (x trip count
+            # collective blow-up); H-sharding propagates from qb/kb/vb
+            o_new = o * corr[..., None] + pv
+            return (o_new, m_new, l_new), None
+
+        o0 = jnp.zeros((b, h, q_block, hd), jnp.float32)
+        m0 = jnp.full((b, h, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_block), jnp.float32)
+        (o, m, l), _ = lax.scan(kv_step, (o0, m0, l0), jnp.arange(nkv))
+        o = o / jnp.maximum(l[..., None], 1e-38)
+        return None, hshard(o.astype(q.dtype))
+
+    _, outs = lax.scan(q_step, None, jnp.arange(nq))
+    # outs: (nq, B, H, qb, Hd) -> (B, Sq, H, Hd)
+    out = jnp.moveaxis(outs, 0, 1).transpose(0, 1, 3, 2, 4)
+    out = out.reshape(b, nq * q_block, h, hd)
+    return out[:, :sq]
+
+
+def _decode_attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   length_mask: jax.Array,
+                   softcap: Optional[float] = None) -> jax.Array:
+    """One-token attention: q (B, 1, K, G, Hd) vs full cache (B, S, K, Hd).
+
+    ``length_mask`` (B, S) marks valid cache slots.  The cache sequence dim
+    may be sharded (decode SP); the softmax reduction then lowers to an
+    all-reduce inserted by GSPMD.
+    """
+    hd = q.shape[-1]
+    s = jnp.einsum("bqkgh,btkh->bkgqt", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(length_mask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def init_attention(b: ParamBuilder, path: str, cfg: ModelConfig,
+                   cross: bool = False) -> Dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim()
+    h, k = cfg.n_heads, cfg.n_kv_heads
+    p = {
+        "wq": b.param(f"{path}/wq", (d, h * hd), ("fsdp", "tp")),
+        "wk": b.param(f"{path}/wk", (d, k * hd), ("fsdp", "tp")),
+        "wv": b.param(f"{path}/wv", (d, k * hd), ("fsdp", "tp")),
+        "wo": b.param(f"{path}/wo", (h * hd, d), ("tp", "fsdp"),
+                      scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(b, f"{path}/q_norm", hd)
+        p["k_norm"] = init_norm(b, f"{path}/k_norm", hd)
+    return p
+
+
+def attention(p: Dict, cfg: ModelConfig, rules: MeshRules, x: jax.Array, *,
+              mode: str = "train",
+              positions: Optional[jax.Array] = None,
+              cache: Optional[Dict] = None,
+              kv_source: Optional[jax.Array] = None,
+              causal: bool = True,
+              window: Optional[int] = None,
+              ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Returns (output, new_cache).  ``kv_source`` enables cross-attention.
+
+    Cache layout: {"k": (B, S, K, Hd), "v": ..., "pos": ()} — for windowed
+    attention S == window (ring buffer), else S == max sequence length.
+    """
+    b_, s, d = x.shape
+    hd = cfg.resolved_head_dim()
+    h, nk = cfg.n_heads, cfg.n_kv_heads
+    g = h // nk
+    compute_dt = x.dtype
+
+    q = (x @ p["wq"].astype(compute_dt)).reshape(b_, s, nk, g, hd)
+    kv_in = x if kv_source is None else kv_source
+    k = (kv_in @ p["wk"].astype(compute_dt)).reshape(b_, kv_in.shape[1], nk, hd)
+    v = (kv_in @ p["wv"].astype(compute_dt)).reshape(b_, kv_in.shape[1], nk, hd)
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    is_cross = kv_source is not None
+    if positions is None:
+        positions = jnp.arange(s)
+    if not is_cross:  # RoPE on self-attention only
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+        q = apply_rope(q.reshape(b_, s, nk * g, hd), cos, sin) \
+            .reshape(b_, s, nk, g, hd)
+        k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if mode in ("train", "prefill"):
+        # expand KV to the full head count: the flash intermediates then
+        # shard over "model" on H (K alone is not divisible by the TP axis)
+        kx = jnp.repeat(k, g, axis=2)
+        vx = jnp.repeat(v, g, axis=2)
+        out = _flash_attend(q.reshape(b_, s, h, hd), kx, vx,
+                            causal=causal and not is_cross, window=window,
+                            softcap=cfg.attn_logit_softcap, rules=rules)
+        out = out.reshape(b_, s, nk, g, hd)
+        if mode == "prefill":
+            ck, cv = k, v
+            if window is not None and s > window:
+                # ring-buffer layout: token at absolute pos p lives in slot
+                # p % window, so future decode writes land consistently
+                ck = jnp.roll(k[:, -window:], shift=s % window, axis=1)
+                cv = jnp.roll(v[:, -window:], shift=s % window, axis=1)
+            new_cache = {"k": ck, "v": cv,
+                         "pos": jnp.asarray(s, jnp.int32)}
+    elif mode == "decode":
+        assert cache is not None
+        slots = cache["k"].shape[1]
+        pos = cache["pos"]
+        slot = pos % slots if window is not None else pos
+        ck = lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1) \
+            if not is_cross else cache["k"]
+        cv = lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1) \
+            if not is_cross else cache["v"]
+        idx = jnp.arange(slots)
+        if is_cross:
+            valid = idx[None, :] < slots  # full encoder context
+        elif window is not None:
+            valid = idx[None, :] <= jnp.minimum(pos, slots - 1)
+        else:
+            valid = (idx[None, :] <= pos)
+        out = _decode_attend(q, ck, cv, length_mask=valid,
+                             softcap=cfg.attn_logit_softcap)
+        new_cache = {"k": ck, "v": cv,
+                     "pos": pos + (0 if is_cross else s)}
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    out = out.reshape(b_, s, h * hd)
+    out = shard(out, rules, "batch", None, "tp")
+    y = out @ p["wo"].astype(compute_dt)
+    return shard(y, rules, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(b: ParamBuilder, path: str, cfg: ModelConfig,
+             d_ff: Optional[int] = None) -> Dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w_gate": b.param(f"{path}/w_gate", (d, f), ("fsdp", "tp")),
+        "w_up": b.param(f"{path}/w_up", (d, f), ("fsdp", "tp")),
+        "w_down": b.param(f"{path}/w_down", (f, d), ("tp", "fsdp"),
+                          scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def mlp(p: Dict, rules: MeshRules, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    hid = jax.nn.silu(x @ p["w_gate"].astype(dt)) * (x @ p["w_up"].astype(dt))
+    hid = shard(hid, rules, "batch", None, "tp")
+    out = hid @ p["w_down"].astype(dt)
+    return shard(out, rules, "batch", None, None)
+
+
+def init_rope_cache_spec():  # placeholder for API symmetry
+    return None

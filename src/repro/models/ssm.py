@@ -1,0 +1,419 @@
+"""Sequence-state models: xLSTM (mLSTM + sLSTM) and Mamba, plus an FFT
+long-convolution mixer that exercises the paper's core FFT inside an LM.
+
+Memory discipline mirrors the attention module: nothing materializes a
+(B, S, d_inner, d_state) tensor for long sequences — Mamba runs a chunked
+selective scan (associative scan inside chunks, carried state between), and
+mLSTM's quadratic parallel form is only used for training/prefill while
+decode is O(d^2) recurrent.
+
+Decode state trees (the SSM "KV cache"):
+  mlstm: {"C": (B,H,dk,dv), "n": (B,H,dk), "m": (B,H), "pos": ()}
+  slstm: {"c","n","h": (B,D), "m": (B,D), "pos": ()}
+  mamba: {"conv": (B, d_conv-1, d_inner), "h": (B, d_inner, N), "pos": ()}
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import MeshRules, ParamBuilder, shard
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory, exponential gating) — xLSTM's parallel workhorse
+# ---------------------------------------------------------------------------
+
+def init_mlstm(b: ParamBuilder, path: str, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    di = cfg.expand * d
+    h = cfg.n_heads
+    return {
+        "w_in": b.param(f"{path}/w_in", (d, 2 * di), ("fsdp", "tp")),
+        "wq": b.param(f"{path}/wq", (di, di), ("fsdp", "tp")),
+        "wk": b.param(f"{path}/wk", (di, di), ("fsdp", "tp")),
+        "wv": b.param(f"{path}/wv", (di, di), ("fsdp", "tp")),
+        "w_if": b.param(f"{path}/w_if", (di, 2 * h), ("fsdp", None)),
+        "w_out": b.param(f"{path}/w_out", (di, d), ("tp", "fsdp"),
+                         scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+        "skip_scale": b.param(f"{path}/skip_scale", (di,), (None,),
+                              init="ones"),
+    }
+
+
+def _mlstm_chunked(q, k, v, i_pre, logf, *, chunk: int):
+    """Chunkwise-parallel stabilized mLSTM (flash-linear-attention style).
+
+    Within a chunk of length L: the quadratic decay matrix is only (L, L).
+    Across chunks: the matrix memory (C, n, m) is carried recurrently,
+    exactly the decode-state update folded per chunk.  Peak score memory
+    drops from O(S^2) to O(S*L) — §Perf iteration 1 (xlstm train_4k was
+    memory-bound at 18 GiB/device with the full S^2 form).
+
+    q,k,v: (B, S, H, d); i_pre/logf: (B, S, H).  Returns (out, (C, n, m)).
+    """
+    b_, s, h, dh = q.shape
+    assert s % chunk == 0, "sequence must divide the mLSTM chunk"
+    nc = s // chunk
+    qf = q.astype(jnp.float32).reshape(b_, nc, chunk, h, dh).swapaxes(0, 1)
+    kf = k.astype(jnp.float32).reshape(b_, nc, chunk, h, dh).swapaxes(0, 1)
+    vf = v.astype(jnp.float32).reshape(b_, nc, chunk, h, dh).swapaxes(0, 1)
+    ic = i_pre.reshape(b_, nc, chunk, h).swapaxes(0, 1)
+    fc = logf.reshape(b_, nc, chunk, h).swapaxes(0, 1)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(carry, inp):
+        c_st, n_st, m_st = carry            # (B,H,dk,dv), (B,H,dk), (B,H)
+        qc, kc, vc, ii, ff = inp
+        cum = jnp.cumsum(ff, axis=1)        # (B, L, H) in-chunk sum of logf
+        # intra-chunk decay D[t,u] = F_t - F_u + i_u (u <= t)
+        dmat = cum[:, :, None, :] - cum[:, None, :, :] + ii[:, None, :, :]
+        dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+        m_intra = jnp.max(dmat, axis=2)     # (B, L, H)
+        # inter-chunk: state contribution decays by F_t from chunk start
+        m_state = cum + m_st[:, None, :]    # (B, L, H)
+        m_tot = jnp.maximum(m_intra, m_state)
+
+        dsc = jnp.exp(dmat - m_tot[:, :, None, :])
+        scores = jnp.einsum("blhd,buhd->bluh", qc, kc) * dsc
+        num_intra = jnp.einsum("bluh,buhd->blhd", scores, vc)
+        den_intra = scores.sum(axis=2)      # (B, L, H)
+
+        w_state = jnp.exp(m_state - m_tot)  # (B, L, H)
+        num_state = jnp.einsum("blhk,bhkv->blhv", qc, c_st) \
+            * w_state[..., None]
+        den_state = jnp.einsum("blhk,bhk->blh", qc, n_st) * w_state
+
+        den = jnp.maximum(jnp.abs(den_intra + den_state),
+                          jnp.exp(-m_tot))
+        out_c = (num_intra + num_state) / den[..., None]
+
+        # fold this chunk into the carried state
+        f_all = cum[:, -1]                  # (B, H) total chunk decay
+        m_new = jnp.maximum(f_all + m_st,
+                            jnp.max(f_all[:, None] - cum + ii, axis=1))
+        w_c = jnp.exp(f_all[:, None] - cum + ii - m_new[:, None])
+        c_new = jnp.exp(f_all + m_st - m_new)[..., None, None] * c_st \
+            + jnp.einsum("buh,buhk,buhv->bhkv", w_c, kc, vc)
+        n_new = jnp.exp(f_all + m_st - m_new)[..., None] * n_st \
+            + jnp.einsum("buh,buhk->bhk", w_c, kc)
+        return (c_new, n_new, m_new), out_c
+
+    c0 = jnp.zeros((b_, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b_, h, dh), jnp.float32)
+    m0 = jnp.full((b_, h), -1e30, jnp.float32)
+    (c_f, n_f, m_f), outs = lax.scan(step, (c0, n0, m0),
+                                     (qf, kf, vf, ic, fc))
+    out = outs.swapaxes(0, 1).reshape(b_, s, h, dh)
+    return out, (c_f, n_f, m_f)
+
+
+def mlstm(p: Dict, cfg: ModelConfig, rules: MeshRules, x: jax.Array, *,
+          mode: str = "train", cache: Optional[Dict] = None,
+          ) -> Tuple[jax.Array, Optional[Dict]]:
+    b_, s, d = x.shape
+    dt = x.dtype
+    di = cfg.expand * d
+    h = cfg.n_heads
+    dh = di // h
+
+    xz = shard(x @ p["w_in"].astype(dt), rules, "batch", None, "tp")
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = shard(xi, rules, "batch", None, "tp")
+    q = (xi @ p["wq"].astype(dt)).reshape(b_, s, h, dh)
+    k = (xi @ p["wk"].astype(dt)).reshape(b_, s, h, dh) / math.sqrt(dh)
+    v = (xi @ p["wv"].astype(dt)).reshape(b_, s, h, dh)
+    gates = (xi @ p["w_if"].astype(dt)).astype(jnp.float32)
+    i_pre, f_pre = jnp.split(gates.reshape(b_, s, 2, h), 2, axis=2)
+    i_pre, f_pre = i_pre[:, :, 0], f_pre[:, :, 0]          # (B, S, H)
+    logf = jax.nn.log_sigmoid(f_pre)
+
+    new_cache = None
+    if mode in ("train", "prefill"):
+        out, st = _mlstm_chunked(q, k, v, i_pre, logf,
+                                 chunk=min(256, s))
+        if mode == "prefill":
+            new_cache = {"C": st[0], "n": st[1], "m": st[2],
+                         "pos": jnp.asarray(s, jnp.int32)}
+    elif mode == "decode":
+        assert cache is not None and s == 1
+        c_prev, n_prev, m_prev = (cache["C"], cache["n"],
+                                  cache["m"])              # f32 states
+        lf = logf[:, 0]                                    # (B, H)
+        ii = i_pre[:, 0]
+        m_new = jnp.maximum(lf + m_prev, ii)
+        fg = jnp.exp(lf + m_prev - m_new)[..., None, None]
+        ig = jnp.exp(ii - m_new)[..., None, None]
+        k1 = k[:, 0][..., :, None].astype(jnp.float32)     # (B,H,dk,1)
+        v1 = v[:, 0][..., None, :].astype(jnp.float32)     # (B,H,1,dv)
+        c_new = fg * c_prev + ig * (k1 * v1)               # (B,H,dk,dv)
+        n_new = fg[..., 0] * n_prev + ig[..., 0] * k1[..., 0]
+        q1 = q[:, 0].astype(jnp.float32)                   # (B,H,dk)
+        num = jnp.einsum("bhkv,bhk->bhv", c_new, q1)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q1)),
+                          jnp.exp(-m_new))
+        out = (num / den[..., None])[:, None]              # (B,1,H,dv)
+        out = out.reshape(b_, 1, h, dh)
+        new_cache = {"C": c_new, "n": n_new, "m": m_new,
+                     "pos": cache["pos"] + 1}
+    else:
+        raise ValueError(mode)
+
+    out = out.reshape(b_, s, di).astype(dt)
+    out = out + xi * p["skip_scale"].astype(dt)
+    out = out * jax.nn.silu(z)
+    y = out @ p["w_out"].astype(dt)
+    return shard(y, rules, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, block-diagonal recurrence)
+# ---------------------------------------------------------------------------
+
+def init_slstm(b: ParamBuilder, path: str, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    return {
+        "w_gates": b.param(f"{path}/w_gates", (d, 4 * d), ("fsdp", "tp")),
+        "r_gates": b.param(f"{path}/r_gates", (h, dh, 4 * dh), (None, None, None),
+                           scale=0.02),
+        "w_out": b.param(f"{path}/w_out", (d, d), ("tp", "fsdp"),
+                         scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _slstm_step(p, cfg, x_t, state):
+    """One sLSTM step.  x_t: (B, 4D) pre-projected gates; state dict."""
+    b_, four_d = x_t.shape
+    d = four_d // 4
+    h = cfg.n_heads
+    dh = d // h
+    hx = state["h"].reshape(b_, h, dh)
+    rec = jnp.einsum("bhd,hdk->bhk", hx.astype(jnp.float32),
+                     p["r_gates"].astype(jnp.float32)).reshape(b_, 4 * d)
+    pre = x_t.astype(jnp.float32) + rec
+    z_pre, i_pre, f_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    zt = jnp.tanh(z_pre)
+    ot = jax.nn.sigmoid(o_pre)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    ig = jnp.exp(i_pre - m_new)
+    fg = jnp.exp(logf + state["m"] - m_new)
+    c_new = fg * state["c"] + ig * zt
+    n_new = fg * state["n"] + ig
+    h_new = ot * (c_new / jnp.maximum(n_new, 1e-6))
+    return h_new, {"c": c_new, "n": n_new, "m": m_new, "h": h_new}
+
+
+def slstm(p: Dict, cfg: ModelConfig, rules: MeshRules, x: jax.Array, *,
+          mode: str = "train", cache: Optional[Dict] = None,
+          ) -> Tuple[jax.Array, Optional[Dict]]:
+    b_, s, d = x.shape
+    dt = x.dtype
+    gates_in = x @ p["w_gates"].astype(dt)                  # (B, S, 4D)
+
+    def zero_state():
+        z = jnp.zeros((b_, d), jnp.float32)
+        return {"c": z, "n": z, "m": jnp.full((b_, d), -1e30, jnp.float32),
+                "h": z, "pos": jnp.asarray(0, jnp.int32)}
+
+    state = cache if cache is not None else zero_state()
+    carry0 = {k: v for k, v in state.items() if k != "pos"}
+
+    if mode == "decode":
+        h_new, st = _slstm_step(p, cfg, gates_in[:, 0], carry0)
+        st["pos"] = state["pos"] + 1
+        y = (h_new[:, None].astype(dt)) @ p["w_out"].astype(dt)
+        return shard(y, rules, "batch", None, None), st
+
+    def step(carry, g_t):
+        h_new, st = _slstm_step(p, cfg, g_t, carry)
+        return st, h_new
+
+    final, hs = lax.scan(step, carry0, jnp.swapaxes(gates_in, 0, 1))
+    hs = jnp.swapaxes(hs, 0, 1).astype(dt)                  # (B, S, D)
+    y = hs @ p["w_out"].astype(dt)
+    new_cache = None
+    if mode == "prefill":
+        final["pos"] = state["pos"] + s
+        new_cache = final
+    return shard(y, rules, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM) — chunked associative scan
+# ---------------------------------------------------------------------------
+
+def init_mamba(b: ParamBuilder, path: str, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    di = cfg.expand * d
+    n = cfg.d_state
+    dt_rank = max(1, math.ceil(d / 16))
+    return {
+        "w_in": b.param(f"{path}/w_in", (d, 2 * di), ("fsdp", "tp")),
+        "conv_w": b.param(f"{path}/conv_w", (cfg.d_conv, di), (None, "tp")),
+        "conv_b": b.param(f"{path}/conv_b", (di,), ("tp",), init="zeros"),
+        "w_x": b.param(f"{path}/w_x", (di, dt_rank + 2 * n), ("tp", None)),
+        "w_dt": b.param(f"{path}/w_dt", (dt_rank, di), (None, "tp")),
+        "dt_bias": b.param(f"{path}/dt_bias", (di,), ("tp",), init="ones"),
+        "a_log": b.param(f"{path}/a_log", (di, n), ("tp", None),
+                         init="mamba_a"),
+        "d_skip": b.param(f"{path}/d_skip", (di,), ("tp",), init="ones"),
+        "w_out": b.param(f"{path}/w_out", (di, d), ("tp", "fsdp"),
+                         scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _mamba_inner(p, cfg, xc, dt_act):
+    """Selective-scan coefficients for a chunk.  xc: (B, L, di) f32."""
+    n = cfg.d_state
+    dt_rank = p["w_dt"].shape[0]
+    proj = xc @ p["w_x"].astype(xc.dtype)                   # (B, L, r+2N)
+    dt_raw, b_in, c_in = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    delta = jax.nn.softplus(dt_raw @ p["w_dt"].astype(xc.dtype)
+                            + p["dt_bias"].astype(xc.dtype))  # (B, L, di)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))            # (di, N)
+    abar = jnp.exp(delta[..., None] * a[None, None])        # (B, L, di, N)
+    bx = (delta * xc)[..., None] * b_in[:, :, None, :]      # (B, L, di, N)
+    return abar, bx, c_in
+
+
+def mamba(p: Dict, cfg: ModelConfig, rules: MeshRules, x: jax.Array, *,
+          mode: str = "train", cache: Optional[Dict] = None,
+          chunk: int = 128) -> Tuple[jax.Array, Optional[Dict]]:
+    b_, s, d = x.shape
+    dt = x.dtype
+    di = cfg.expand * d
+    n = cfg.d_state
+    kw = cfg.d_conv
+
+    xz = shard(x @ p["w_in"].astype(dt), rules, "batch", None, "tp")
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard(xin, rules, "batch", None, "tp")
+
+    # causal depthwise conv
+    conv_state_in = (cache["conv"] if (mode == "decode" and cache is not None)
+                     else jnp.zeros((b_, kw - 1, di), dt))
+    xpad = jnp.concatenate([conv_state_in.astype(dt), xin], axis=1) \
+        if mode == "decode" else jnp.pad(xin, ((0, 0), (kw - 1, 0), (0, 0)))
+    conv = sum(xpad[:, i:i + s] * p["conv_w"][i].astype(dt)
+               for i in range(kw)) + p["conv_b"].astype(dt)
+    xc = jax.nn.silu(conv).astype(jnp.float32)
+
+    if mode == "decode":
+        assert cache is not None and s == 1
+        abar, bx, c_in = _mamba_inner(p, cfg, xc, dt)
+        h = abar[:, 0] * cache["h"] + bx[:, 0]              # (B, di, N)
+        y = jnp.einsum("bdn,bn->bd", h, c_in[:, 0])[:, None]
+        new_conv = jnp.concatenate([conv_state_in[:, 1:], xin], axis=1)
+        new_cache = {"conv": new_conv.astype(dt), "h": h,
+                     "pos": cache["pos"] + 1}
+    else:
+        lc = min(chunk, s)
+        assert s % lc == 0, "sequence must divide the scan chunk"
+        nchunks = s // lc
+        # store the chunked scan input in bf16 (compute stays f32 inside
+        # chunk_step) and keep d_inner sharded over "model" — the scan is
+        # elementwise over channels, so TP-sharding it is collective-free
+        xcs = xc.reshape(b_, nchunks, lc, di).swapaxes(0, 1).astype(dt)
+        xcs = shard(xcs, rules, None, "batch", None, "tp")
+
+        # jax.checkpoint: the associative scan's log-depth intermediates
+        # ((B,L,di,N) f32 pairs) must be recomputed in backward, not stored
+        # — storing them for every chunk of every mamba layer was the
+        # 530 GiB/device blow-up on jamba train_4k (§Perf iteration 2).
+        @jax.checkpoint
+        def chunk_step(h0, xck):
+            xck = shard(xck.astype(jnp.float32), rules, "batch", None, "tp")
+            abar, bx, c_in = _mamba_inner(p, cfg, xck, jnp.float32)
+            abar = shard(abar, rules, "batch", None, "tp", None)
+            bx = shard(bx, rules, "batch", None, "tp", None)
+            # prepend carry as an extra step: h_t = abar_t h_{t-1} + bx_t
+            def comb(l, r):
+                al, bl = l
+                ar, br = r
+                return al * ar, bl * ar + br
+            a_all = jnp.concatenate(
+                [jnp.ones((b_, 1, di, n), jnp.float32), abar], axis=1)
+            b_all = jnp.concatenate([h0[:, None], bx], axis=1)
+            _, hs = lax.associative_scan(comb, (a_all, b_all), axis=1)
+            hs = hs[:, 1:]                                  # (B, L, di, N)
+            y = jnp.einsum("bldn,bln->bld", hs, c_in)
+            return hs[:, -1], y
+
+        h0 = jnp.zeros((b_, di, n), jnp.float32)
+        hf, ys = lax.scan(chunk_step, h0, xcs)
+        y = ys.swapaxes(0, 1).reshape(b_, s, di)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": xin[:, s - (kw - 1):, :].astype(dt),
+                         "h": hf, "pos": jnp.asarray(s, jnp.int32)}
+
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y.astype(dt) * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(dt)
+    return shard(out, rules, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFT long-convolution mixer (Hyena-style) — the paper's FFT inside an LM
+# ---------------------------------------------------------------------------
+
+def init_fft_conv(b: ParamBuilder, path: str, cfg: ModelConfig,
+                  n_basis: int = 16) -> Dict:
+    d = cfg.d_model
+    di = cfg.expand * d
+    return {
+        "w_in": b.param(f"{path}/w_in", (d, 2 * di), ("fsdp", "tp")),
+        "basis_w": b.param(f"{path}/basis_w", (di, n_basis), ("tp", None)),
+        "decay": b.param(f"{path}/decay", (n_basis,), (None,), init="ones"),
+        "w_out": b.param(f"{path}/w_out", (di, d), ("tp", "fsdp"),
+                         scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def fft_conv(p: Dict, cfg: ModelConfig, rules: MeshRules, x: jax.Array, *,
+             mode: str = "train", cache: Optional[Dict] = None,
+             fft_backend: str = "xla") -> Tuple[jax.Array, Optional[Dict]]:
+    """Causal implicit long convolution via FFT (training path only).
+
+    y[:, t] = sum_{u<=t} h[:, t-u] * x[:, u], h built from a decaying basis.
+    The FFT runs through core.transforms so the matmul/MXU backend (and on
+    sharded sequences, the distributed pipeline) is exercised by an LM.
+    """
+    from repro.core import transforms as ctf
+
+    if mode == "decode":
+        raise NotImplementedError(
+            "fft_conv is a training-time mixer; decode uses ssm_impl='scan'")
+    b_, s, d = x.shape
+    dt = x.dtype
+    di = cfg.expand * d
+
+    xz = shard(x @ p["w_in"].astype(dt), rules, "batch", None, "tp")
+    xin, z = jnp.split(xz, 2, axis=-1)
+    # implicit kernel h: (di, S)
+    t = jnp.arange(s, dtype=jnp.float32)
+    lam = jax.nn.softplus(p["decay"].astype(jnp.float32))   # (K,)
+    basis = jnp.exp(-lam[:, None] * t[None, :] / s)         # (K, S)
+    h = (p["basis_w"].astype(jnp.float32) @ basis)          # (di, S)
+
+    # zero-pad to 2S (linear, causal convolution) and run the core transform
+    nfft = 2 * s
+    xt = jnp.swapaxes(xin, 1, 2).astype(jnp.complex64)      # (B, di, S)
+    xt = jnp.pad(xt, ((0, 0), (0, 0), (0, nfft - s)))
+    hp = jnp.pad(h.astype(jnp.complex64), ((0, 0), (0, nfft - s)))
+    xf = ctf.apply_1d(xt, -1, "fft", backend=fft_backend)
+    hf = ctf.apply_1d(hp, -1, "fft", backend=fft_backend)
+    y = jnp.real(ctf.apply_1d(xf * hf[None], -1, "ifft",
+                              backend=fft_backend))[..., :s]
+    y = jnp.swapaxes(y, 1, 2).astype(dt)
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(dt)
+    return shard(out, rules, "batch", None, None), None

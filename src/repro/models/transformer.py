@@ -1,0 +1,473 @@
+"""Model assembly: embeddings, block stacks (scanned super-blocks), LM heads,
+encoder-decoder and multimodal wrappers, plus cache construction.
+
+Layer heterogeneity (jamba's 1:7 mamba:attn interleave, xlstm's sLSTM
+cadence, MoE-every-k) is expressed as a repeating *super-block pattern*;
+identical super-blocks are stacked and iterated with ``lax.scan`` so the
+compiled HLO contains one super-block body regardless of depth — essential
+to keep 512-device dry-run compiles tractable.
+
+Params are plain nested dicts (leaves created via ParamBuilder, which
+records every leaf's PartitionSpec).  Caches are nested dicts too; see
+``init_caches`` for layouts and ``cache_pspec`` for their shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import MeshRules, ParamBuilder, shard
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .config import ModelConfig
+from .layers import attention, init_attention, init_mlp, init_norm, mlp, \
+    rms_norm
+
+
+# ---------------------------------------------------------------------------
+# super-block pattern
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockPattern:
+    kinds: Tuple[str, ...]        # mixer kind per layer in the super-block
+    moe: Tuple[bool, ...]         # MoE FFN flag per layer
+    n_repeat: int                 # number of scanned super-blocks
+
+    @property
+    def size(self) -> int:
+        return len(self.kinds)
+
+
+def block_pattern(cfg: ModelConfig) -> BlockPattern:
+    kinds = cfg.layer_kinds()
+    moe_flags = tuple(cfg.moe_layer(i) for i in range(cfg.n_layers))
+    # find the smallest repeating unit
+    for unit in range(1, cfg.n_layers + 1):
+        if cfg.n_layers % unit:
+            continue
+        reps = cfg.n_layers // unit
+        if kinds == kinds[:unit] * reps and moe_flags == moe_flags[:unit] * reps:
+            return BlockPattern(kinds[:unit], moe_flags[:unit], reps)
+    return BlockPattern(kinds, moe_flags, 1)
+
+
+# ---------------------------------------------------------------------------
+# one layer
+# ---------------------------------------------------------------------------
+
+_SSM_INITS = {"mlstm": ssm_lib.init_mlstm, "slstm": ssm_lib.init_slstm,
+              "mamba": ssm_lib.init_mamba, "fft_conv": ssm_lib.init_fft_conv}
+_SSM_APPLY = {"mlstm": ssm_lib.mlstm, "slstm": ssm_lib.slstm,
+              "mamba": ssm_lib.mamba, "fft_conv": ssm_lib.fft_conv}
+
+
+def _mixer_kind(cfg: ModelConfig, kind: str) -> str:
+    if kind == "mamba" and cfg.ssm_impl == "fft_conv":
+        return "fft_conv"
+    return kind
+
+
+def init_layer(b: ParamBuilder, path: str, cfg: ModelConfig, kind: str,
+               use_moe: bool, cross: bool = False) -> Dict:
+    p: Dict[str, Any] = {"norm1": init_norm(b, f"{path}/norm1", cfg.d_model)}
+    kind = _mixer_kind(cfg, kind)
+    if kind == "attn":
+        p["attn"] = init_attention(b, f"{path}/attn", cfg)
+    else:
+        p["ssm"] = _SSM_INITS[kind](b, f"{path}/ssm", cfg)
+    if cross:
+        p["norm_x"] = init_norm(b, f"{path}/norm_x", cfg.d_model)
+        p["cross"] = init_attention(b, f"{path}/cross", cfg, cross=True)
+    if cfg.d_ff > 0:
+        p["norm2"] = init_norm(b, f"{path}/norm2", cfg.d_model)
+        if use_moe:
+            p["moe"] = moe_lib.init_moe(b, f"{path}/moe", cfg)
+            if cfg.shared_expert:
+                p["shared_mlp"] = init_mlp(b, f"{path}/shared_mlp", cfg)
+        else:
+            p["mlp"] = init_mlp(b, f"{path}/mlp", cfg)
+    return p
+
+
+def apply_layer(p: Dict, cfg: ModelConfig, rules: MeshRules, x: jax.Array, *,
+                kind: str, use_moe: bool, mode: str,
+                positions: Optional[jax.Array],
+                cache: Optional[Dict], enc_out: Optional[jax.Array],
+                causal: bool = True,
+                ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    from jax.ad_checkpoint import checkpoint_name
+
+    kind = _mixer_kind(cfg, kind)
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        y, c = attention(p["attn"], cfg, rules, h, mode=mode,
+                         positions=positions,
+                         cache=None if cache is None else cache.get("attn"),
+                         causal=causal, window=cfg.window)
+        if c is not None:
+            new_cache["attn"] = c
+    else:
+        y, c = _SSM_APPLY[kind](p["ssm"], cfg, rules, h, mode=mode,
+                                cache=None if cache is None
+                                else cache.get("ssm"))
+        if c is not None:
+            new_cache["ssm"] = c
+    # named so the remat policy can SAVE these post-all-reduce tensors:
+    # backward then skips recomputing the mixer (and its TP collectives)
+    y = checkpoint_name(y, "mixer_out")
+    x = x + y
+    if "cross" in p:
+        h = rms_norm(x, p["norm_x"], cfg.norm_eps)
+        y, c = attention(p["cross"], cfg, rules, h, mode=mode,
+                         positions=positions,
+                         cache=None if cache is None else cache.get("cross"),
+                         kv_source=enc_out, causal=False)
+        if c is not None:
+            new_cache["cross"] = c
+        x = x + y
+    if cfg.d_ff > 0:
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if use_moe:
+            y, a = moe_lib.moe_ffn(p["moe"], cfg, rules, h)
+            aux = aux + a
+            if cfg.shared_expert:
+                y = y + mlp(p["shared_mlp"], rules, h)
+        else:
+            y = mlp(p["mlp"], rules, h)
+        y = checkpoint_name(y, "ffn_out")
+        x = x + y
+    return x, (new_cache or None), aux
+
+
+# ---------------------------------------------------------------------------
+# stacks (scan over super-blocks)
+# ---------------------------------------------------------------------------
+
+def init_stack(b: ParamBuilder, path: str, cfg: ModelConfig,
+               pattern: BlockPattern, cross: bool = False) -> Dict:
+    """Stacked super-block params: every leaf gets a leading (n_repeat,) dim."""
+    reps = pattern.n_repeat
+    saved_param = b.param
+
+    def stacked(pth, shape, logical, **kw):
+        return saved_param(pth, (reps,) + tuple(shape),
+                           (None,) + tuple(logical), **kw)
+
+    b.param = stacked  # type: ignore[assignment]
+    try:
+        layers = {}
+        for j, (kind, use_moe) in enumerate(zip(pattern.kinds, pattern.moe)):
+            layers[f"layer{j}"] = init_layer(
+                b, f"{path}/layer{j}", cfg, kind, use_moe, cross=cross)
+    finally:
+        b.param = saved_param  # type: ignore[assignment]
+    return layers
+
+
+def apply_stack(p: Dict, cfg: ModelConfig, rules: MeshRules,
+                pattern: BlockPattern, x: jax.Array, *, mode: str,
+                positions: Optional[jax.Array],
+                caches: Optional[Dict], enc_out: Optional[jax.Array],
+                causal: bool = True, remat: bool = True,
+                pspecs: Optional[Dict] = None,
+                ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """caches: {"layer{j}": stacked cache tree} (leading dim n_repeat).
+
+    ``pspecs``: the stacked params' PartitionSpec tree.  When given, the
+    per-iteration param slices are re-constrained to their sharded layout
+    INSIDE the scan body — without this, GSPMD may all-gather the whole
+    stacked parameter (all layers at once) outside the loop, which blew
+    llama4's MoE weights up to 43 GiB/device (§Perf G9)."""
+
+    layer_ckpt = cfg.layer_remat and remat and mode == "train"
+
+    def superblock(x, sliced):
+        params_i, caches_i = sliced
+        if pspecs is not None:
+            from jax.sharding import PartitionSpec as P
+
+            def constrain(v, s):
+                try:
+                    return jax.lax.with_sharding_constraint(
+                        v, P(*tuple(s)[1:]))
+                except (ValueError, RuntimeError):
+                    return v
+
+            params_i = jax.tree.map(constrain, params_i, pspecs,
+                                    is_leaf=lambda t: isinstance(t, P))
+        aux = jnp.zeros((), jnp.float32)
+        new_caches = {}
+        for j, (kind, use_moe) in enumerate(zip(pattern.kinds, pattern.moe)):
+            lc = None if caches_i is None else caches_i.get(f"layer{j}")
+            fn = partial(apply_layer, cfg=cfg, rules=rules, kind=kind,
+                         use_moe=use_moe, mode=mode, positions=positions,
+                         cache=lc, enc_out=enc_out, causal=causal)
+            if layer_ckpt:
+                # nested remat: only one layer's working set is live during
+                # the super-block's backward (jamba: 8 hetero layers)
+                fn = jax.checkpoint(lambda pp, xx, f=fn: f(pp, x=xx))
+                x, nc, a = fn(params_i[f"layer{j}"], x)
+            else:
+                x, nc, a = fn(params_i[f"layer{j}"], x=x)
+            aux = aux + a
+            if nc is not None:
+                new_caches[f"layer{j}"] = nc
+        return x, (new_caches or None, aux)
+
+    if remat and mode == "train":
+        # save the per-layer post-collective outputs: backward reuses them
+        # instead of re-running the mixers/FFNs (and their all-reduces) —
+        # cuts the remat share of the collective term for +2x(B,S_sp,D)
+        # stored per layer (sequence-sharded, so |tp|x cheaper)
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "mixer_out", "ffn_out")
+        body = jax.checkpoint(superblock, policy=policy)
+    else:
+        body = superblock
+
+    def scan_fn(carry, sliced):
+        x = carry
+        if mode == "train":
+            # sequence-parallel residual stream: the scan carry is what
+            # remat stores per super-block — sharding S over "model" cuts
+            # those stored residuals |tp|x (Megatron-SP style; GSPMD
+            # inserts the boundary all-gather/reduce-scatter pair)
+            x = shard(x, rules, "batch", "tp", None)
+        x, (nc, aux) = body(x, sliced)
+        return x, (nc, aux)
+
+    x, (new_caches, auxs) = lax.scan(scan_fn, x, (p, caches))
+    return x, new_caches, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# full models
+# ---------------------------------------------------------------------------
+
+def init_model(b: ParamBuilder, cfg: ModelConfig) -> Dict:
+    pattern = block_pattern(cfg)
+    p: Dict[str, Any] = {
+        "embed": b.param("embed", (cfg.padded_vocab, cfg.d_model),
+                         ("tp", "fsdp")),
+        "final_norm": init_norm(b, "final_norm", cfg.d_model),
+        "decoder": init_stack(b, "decoder", cfg, pattern,
+                              cross=cfg.n_enc_layers > 0),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = b.param("lm_head", (cfg.d_model, cfg.padded_vocab),
+                               ("fsdp", "tp"))
+    if cfg.n_enc_layers > 0:
+        enc_pattern = BlockPattern(("attn",), (False,), cfg.n_enc_layers)
+        p["encoder"] = init_stack(b, "encoder", cfg, enc_pattern)
+        p["enc_norm"] = init_norm(b, "enc_norm", cfg.d_model)
+    if cfg.modality is not None:
+        p["modality_proj"] = b.param(
+            "modality_proj", (cfg.d_model, cfg.d_model), ("fsdp", "tp"))
+    return p
+
+
+def _embed(p: Dict, cfg: ModelConfig, rules: MeshRules,
+           tokens: jax.Array, dtype) -> jax.Array:
+    emb = jnp.take(p["embed"], tokens, axis=0).astype(dtype)
+    return shard(emb, rules, "batch", None, None)
+
+
+def _head(p: Dict, cfg: ModelConfig, rules: MeshRules,
+          x: jax.Array) -> jax.Array:
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    w = (p["embed"].T if cfg.tie_embeddings else p["lm_head"]).astype(x.dtype)
+    logits = x @ w
+    return shard(logits, rules, "batch", None, "tp")
+
+
+def _modality_tokens(p, cfg, rules, batch, dtype):
+    """Stub frontend output -> backbone embeddings (precomputed upstream)."""
+    feats = batch["modality_embeds"].astype(dtype)       # (B, S_m, D)
+    return shard(feats @ p["modality_proj"].astype(dtype),
+                 rules, "batch", None, None)
+
+
+def forward(p: Dict, cfg: ModelConfig, rules: MeshRules, batch: Dict, *,
+            mode: str = "train", caches: Optional[Dict] = None,
+            positions: Optional[jax.Array] = None, remat: bool = True,
+            pspecs: Optional[Dict] = None, return_hidden: bool = False,
+            ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (logits, new_caches, aux_loss).
+
+    batch keys: "tokens" (B, S); encdec also "modality_embeds" (B, S_src, D)
+    (audio frames) — vlm replaces the first n_modality_tokens embeddings with
+    projected patch embeds.
+    """
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    pattern = block_pattern(cfg)
+    tokens = batch["tokens"]
+    x = _embed(p, cfg, rules, tokens, dtype)
+
+    enc_out = None
+    if cfg.n_enc_layers > 0:
+        if mode in ("train", "prefill"):
+            enc_in = _modality_tokens(p, cfg, rules, batch, dtype) \
+                if cfg.modality == "audio" else \
+                _embed(p, cfg, rules, batch["src_tokens"], dtype)
+            enc_pattern = BlockPattern(("attn",), (False,), cfg.n_enc_layers)
+            enc_out, _, _ = apply_stack(
+                p["encoder"], cfg, rules, enc_pattern, enc_in, mode="train",
+                positions=None, caches=None, enc_out=None, causal=False,
+                remat=remat,
+                pspecs=None if pspecs is None else pspecs.get("encoder"))
+            enc_out = rms_norm(enc_out, p["enc_norm"], cfg.norm_eps)
+        # decode: cross-attention runs from its prefilled cache (enc_out=None)
+
+    if cfg.modality == "vision" and mode in ("train", "prefill"):
+        vis = _modality_tokens(p, cfg, rules, batch, dtype)
+        nm = vis.shape[1]
+        x = jnp.concatenate([vis, x[:, nm:]], axis=1)
+
+    x, new_caches, aux = apply_stack(
+        p["decoder"], cfg, rules, pattern, x, mode=mode,
+        positions=positions, caches=caches, enc_out=enc_out, remat=remat,
+        pspecs=None if pspecs is None else pspecs.get("decoder"))
+    if return_hidden:
+        # fused-CE path: hand back the normalized hidden + head weight so
+        # the loss can chunk the (B, S, V) logits out of existence
+        xh = rms_norm(x, p["final_norm"], cfg.norm_eps)
+        w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+        return (xh, w), new_caches, aux
+    logits = _head(p, cfg, rules, x)
+    return logits, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch_size: int, max_seq: int,
+                dtype=jnp.bfloat16) -> Dict:
+    """Zeroed cache tree matching ``forward(mode='decode')`` expectations.
+
+    Attention caches hold ``min(window, max_seq)`` slots (SWA ring buffer).
+    Stacked with a leading (n_repeat,) dim to mirror the scanned params.
+    """
+    pattern = block_pattern(cfg)
+    hd = cfg.resolved_head_dim()
+    di = cfg.expand * cfg.d_model
+    h = cfg.n_heads
+    reps = pattern.n_repeat
+
+    def stk(shape, dt=dtype):
+        return jnp.zeros((reps,) + shape, dt)
+
+    caches: Dict[str, Any] = {}
+    for j, kind in enumerate(pattern.kinds):
+        kind = _mixer_kind(cfg, kind)
+        c: Dict[str, Any] = {}
+        if kind == "attn":
+            slots = min(cfg.window or max_seq, max_seq)
+            c["attn"] = {
+                "k": stk((batch_size, slots, cfg.n_kv_heads, hd)),
+                "v": stk((batch_size, slots, cfg.n_kv_heads, hd)),
+                "pos": stk((), jnp.int32),
+            }
+        elif kind == "mlstm":
+            dh = di // h
+            c["ssm"] = {"C": stk((batch_size, h, dh, dh), jnp.float32),
+                        "n": stk((batch_size, h, dh), jnp.float32),
+                        "m": stk((batch_size, h), jnp.float32),
+                        "pos": stk((), jnp.int32)}
+        elif kind == "slstm":
+            d = cfg.d_model
+            c["ssm"] = {"c": stk((batch_size, d), jnp.float32),
+                        "n": stk((batch_size, d), jnp.float32),
+                        "m": stk((batch_size, d), jnp.float32),
+                        "h": stk((batch_size, d), jnp.float32),
+                        "pos": stk((), jnp.int32)}
+        elif kind in ("mamba", "fft_conv"):
+            c["ssm"] = {"conv": stk((batch_size, cfg.d_conv - 1, di)),
+                        "h": stk((batch_size, di, cfg.d_state), jnp.float32),
+                        "pos": stk((), jnp.int32)}
+        if cfg.n_enc_layers > 0:
+            c["cross"] = {
+                "k": stk((batch_size, max_seq, cfg.n_kv_heads, hd)),
+                "v": stk((batch_size, max_seq, cfg.n_kv_heads, hd)),
+                "pos": stk((), jnp.int32),
+            }
+        caches[f"layer{j}"] = c
+    return caches
+
+
+def pad_caches(caches: Dict, cfg: ModelConfig, max_seq: int) -> Dict:
+    """Grow prefill-sized attention caches to a decode budget of max_seq
+    slots (SSM states are seq-free and pass through unchanged)."""
+    def fix(kp, leaf):
+        name = str(getattr(kp[-1], "key", kp[-1]))
+        if name in ("k", "v") and leaf.ndim == 5:
+            cur = leaf.shape[2]
+            want = min(cfg.window or max_seq, max_seq)
+            if cur < want:
+                pad = [(0, 0)] * leaf.ndim
+                pad[2] = (0, want - cur)
+                return jnp.pad(leaf, pad)
+        return leaf
+    return jax.tree_util.tree_map_with_path(fix, caches)
+
+
+def cache_pspec(cfg: ModelConfig, rules: MeshRules, batch_size: int,
+                axis_sizes: Dict[str, int]):
+    """PartitionSpec tree for a cache built by ``init_caches``.
+
+    Policy: shard the batch dim over the batch axes when divisible;
+    shard attention-cache sequence dims over "model" (decode SP) — and over
+    *all* axes when batch=1 (long_500k).  SSM state tensors shard their
+    feature dim over "model".
+    """
+    from jax.sharding import PartitionSpec as P
+
+    batch_axes = rules.batch if isinstance(rules.batch, tuple) else (rules.batch,)
+    batch_sz = 1
+    for a in batch_axes:
+        batch_sz *= axis_sizes[a]
+    batch_ok = batch_size % batch_sz == 0 and batch_size >= batch_sz
+    bspec = (batch_axes if len(batch_axes) > 1 else batch_axes[0]) \
+        if batch_ok else None
+    if batch_ok:
+        seq_axes = "model"
+    else:
+        seq_axes = tuple(batch_axes) + ("model",)
+
+    def leaf_spec(kp, leaf):
+        name = str(getattr(kp[-1], "key", kp[-1]))
+        nd = getattr(leaf, "ndim", 0)
+        if nd <= 1:                      # stacked "pos" counters
+            return P()
+        # leading dim is always the scan stack (replicated)
+        if name in ("k", "v"):           # (reps, B, S, K, hd)
+            return P(None, bspec, seq_axes, None, None)
+        if name == "C":                  # mlstm (reps, B, H, dk, dv)
+            return P(None, bspec, None, None, "model")
+        if name == "n":
+            return P(None, bspec, None, None) if nd == 4 \
+                else P(None, bspec, "model")
+        if name == "m":                  # (reps, B, H) or (reps, B, D)
+            return P(None, bspec, None)
+        if name == "conv":               # mamba (reps, B, kw-1, di)
+            return P(None, bspec, None, "model")
+        if name == "h":                  # mamba (reps,B,di,N) | slstm (reps,B,D)
+            return P(None, bspec, "model", None) if nd == 4 \
+                else P(None, bspec, "model")
+        if name == "c":                  # slstm (reps, B, D)
+            return P(None, bspec, "model")
+        return P(*((None,) * nd))
+
+    def make(tree):
+        return jax.tree_util.tree_map_with_path(leaf_spec, tree)
+
+    return make

@@ -1,0 +1,86 @@
+"""AdamW with sharded state, global-norm clipping and cosine schedule.
+
+Optimizer moments inherit each parameter's PartitionSpec (ZeRO-style: FSDP
+parameters imply FSDP moments, so optimizer memory scales 1/|fsdp axes|).
+``moment_dtype`` is configurable: the 400B-class configs use bf16 moments to
+fit the v5e HBM budget (recorded in EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = cfg.lr_peak * (step + 1) / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr_peak * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_init(params, cfg: AdamWConfig) -> Dict[str, Any]:
+    dt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros_like(p, dtype=dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig,
+                 ) -> Tuple[Any, Dict[str, Any]]:
+    count = state["count"] + 1
+    lr = cosine_schedule(cfg, state["count"])
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    dt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    b1, b2 = cfg.b1, cfg.b2
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        step_ = lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                      + cfg.weight_decay * p.astype(jnp.float32))
+        return ((p.astype(jnp.float32) - step_).astype(p.dtype),
+                m_new.astype(dt), v_new.astype(dt))
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "count": count}

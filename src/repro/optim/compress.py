@@ -1,0 +1,37 @@
+"""Gradient compression for the data-parallel reduction.
+
+Two mechanisms (distributed-optimization tricks for 1000+ node scale):
+
+* ``bf16_compress`` — cast gradients to bf16 before the cross-replica
+  reduce.  Under SPMD the backward all-reduce/reduce-scatter then moves half
+  the bytes; the optimizer re-accumulates in f32.  This is the default for
+  all production configs (2x collective-term reduction, see §Perf).
+* int8 error-feedback — quantize grads to int8 with a per-tensor scale and
+  carry the quantization error into the next step (EF-SGD style).  Exposed
+  for experimentation; tests verify the error-feedback invariant (decoded
+  sum over steps converges to the true gradient sum).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def bf16_compress(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def error_feedback_int8_encode(g: jax.Array, err: jax.Array,
+                               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (q_int8, scale, new_err).  g and err are f32."""
+    target = g + err
+    scale = jnp.maximum(jnp.max(jnp.abs(target)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(target / scale), -127, 127).astype(jnp.int8)
+    new_err = target - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def error_feedback_int8_decode(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,131 @@
+"""Distributed FFT pipeline vs numpy on an 8-device (2x4) fake mesh.
+
+These run in subprocesses because the device count must be set before jax
+initializes (the main test process keeps the real 1-CPU view)."""
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+
+COMMON = """
+import os, numpy as np, jax, jax.numpy as jnp
+from jax.sharding import AxisType
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+from repro.core import fft3d, ifft3d, poisson_solve
+rng = np.random.default_rng(0)
+x = (rng.standard_normal((8, 8, 16)) + 1j*rng.standard_normal((8, 8, 16))).astype(np.complex64)
+ref = np.fft.fftn(x)
+def relerr(a, b):
+    return float(np.max(np.abs(np.asarray(a) - b)) / np.max(np.abs(b)))
+"""
+
+
+def test_pencil_c2c_and_roundtrip():
+    out = run_subprocess(COMMON + """
+y = fft3d(jnp.asarray(x), mesh=mesh, decomp="pencil")
+print("fwd", relerr(y, ref))
+xb = ifft3d(y, mesh=mesh, decomp="pencil")
+print("rt", float(np.max(np.abs(np.asarray(xb) - x))))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert float(vals["fwd"]) < 1e-5
+    assert float(vals["rt"]) < 1e-5
+
+
+def test_slab_c2c():
+    out = run_subprocess(COMMON + """
+y = fft3d(jnp.asarray(x), mesh=mesh, decomp="slab", mesh_axes=("model",))
+print("fwd", relerr(y, ref))
+""")
+    assert float(out.split()[-1]) < 1e-5
+
+
+@pytest.mark.parametrize("n_chunks", [2, 4])
+def test_chunked_overlap_identical(n_chunks):
+    out = run_subprocess(COMMON + f"""
+y_bulk = fft3d(jnp.asarray(x), mesh=mesh, decomp="pencil", n_chunks=1)
+y_chk = fft3d(jnp.asarray(x), mesh=mesh, decomp="pencil", n_chunks={n_chunks})
+print("diff", float(np.max(np.abs(np.asarray(y_bulk) - np.asarray(y_chk)))))
+print("fwd", relerr(y_chk, ref))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert float(vals["diff"]) < 1e-6  # bulk and pipelined paths identical
+    assert float(vals["fwd"]) < 1e-5
+
+
+def test_matmul_backend():
+    out = run_subprocess(COMMON + """
+y = fft3d(jnp.asarray(x), mesh=mesh, decomp="pencil", backend="matmul")
+print("fwd", relerr(y, ref))
+""")
+    assert float(out.split()[-1]) < 1e-4
+
+
+def test_r2c_padded_pipeline():
+    out = run_subprocess(COMMON + """
+xr = rng.standard_normal((16, 8, 8)).astype(np.float32)
+y = fft3d(jnp.asarray(xr), mesh=mesh, kinds=("rfft", "fft", "fft"))
+refr = np.fft.fftn(xr)[:9]
+print("shape", y.shape[0])
+print("fwd", float(np.max(np.abs(np.asarray(y)[:9] - refr)) / np.max(np.abs(refr))))
+xb = ifft3d(y, mesh=mesh, grid=(16, 8, 8), kinds=("rfft", "fft", "fft"))
+print("rt", float(np.max(np.abs(np.asarray(xb) - xr))))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert int(vals["shape"]) == 10   # 16//2+1=9 padded to 10 (lcm 2)
+    assert float(vals["fwd"]) < 1e-5
+    assert float(vals["rt"]) < 1e-5
+
+
+def test_mixed_r2r_topology():
+    out = run_subprocess(COMMON + """
+xr = rng.standard_normal((8, 8, 8)).astype(np.float32)
+y = fft3d(jnp.asarray(xr), mesh=mesh, kinds=("fft", "fft", "dct2"))
+xb = ifft3d(y, mesh=mesh, kinds=("fft", "fft", "dct2"))
+print("rt", float(np.max(np.abs(np.real(np.asarray(xb)) - xr))))
+""")
+    assert float(out.split()[-1]) < 1e-5
+
+
+def test_poisson_periodic_residual():
+    out = run_subprocess(COMMON + """
+n = 16; L = 2*np.pi; dx = L/n
+rhs = rng.standard_normal((n, n, n)).astype(np.float32); rhs -= rhs.mean()
+phi = np.asarray(poisson_solve(jnp.asarray(rhs), mesh=mesh))
+lap = sum(np.roll(phi, s, a) for a in range(3) for s in (1, -1)) - 6*phi
+lap /= dx**2
+print("res", float(np.max(np.abs(lap - rhs)) / np.max(np.abs(rhs))))
+""")
+    assert float(out.split()[-1]) < 1e-4
+
+
+def test_poisson_bounded_topology():
+    """(Periodic, Periodic, Bounded) — the Fig. 8 PPB case (DCT along z)."""
+    out = run_subprocess(COMMON + """
+n = 16; L = 2*np.pi; dx = L/n
+rng2 = np.random.default_rng(3)
+rhs = rng2.standard_normal((n, n, n)).astype(np.float32); rhs -= rhs.mean()
+phi = np.asarray(poisson_solve(jnp.asarray(rhs), mesh=mesh,
+                               topology=("periodic", "periodic", "bounded")))
+phi = np.real(phi)
+# interior-point residual with Neumann ghost cells on z
+pz = np.concatenate([phi[:, :, :1], phi, phi[:, :, -1:]], axis=2)
+lap = (np.roll(phi, 1, 0) + np.roll(phi, -1, 0) + np.roll(phi, 1, 1)
+       + np.roll(phi, -1, 1) + pz[:, :, 2:] + pz[:, :, :-2] - 6*phi) / dx**2
+print("res", float(np.max(np.abs(lap - rhs)) / np.max(np.abs(rhs))))
+""")
+    assert float(out.split()[-1]) < 1e-3
+
+
+def test_plan_cache_reuse_across_calls():
+    out = run_subprocess(COMMON + """
+from repro.core import GLOBAL_PLAN_CACHE
+fft3d(jnp.asarray(x), mesh=mesh)
+s1 = GLOBAL_PLAN_CACHE.stats()
+fft3d(jnp.asarray(x), mesh=mesh)   # identical transform -> cache hit
+s2 = GLOBAL_PLAN_CACHE.stats()
+print("plans", s1["plans"], s2["plans"], "hits", s2["hits"])
+""")
+    toks = out.split()
+    assert toks[1] == toks[2]       # no new plan created
+    assert int(toks[-1]) >= 1       # at least one hit

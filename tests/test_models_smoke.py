@@ -1,0 +1,192 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED config
+of the same family runs one forward/train step on CPU, asserting output
+shapes and finiteness.  Also decode-path consistency for representative
+archs and cost-model sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, applicable_shapes, get_config, smoke_config
+from repro.distributed.sharding import MeshRules
+from repro.launch.steps import (build_params, lm_loss, make_decode_step,
+                                make_prefill_step, make_train_step)
+from repro.models import transformer as tfm
+from repro.models.config import ShapeConfig
+from repro.models.costs import param_counts, step_flops
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+B, S = 2, 32
+
+
+def make_batch(cfg, with_labels=True):
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if with_labels:
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    if cfg.modality == "audio":
+        batch["modality_embeds"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.d_model)), jnp.float32)
+    elif cfg.modality == "vision":
+        n = min(cfg.n_modality_tokens, S)
+        batch["modality_embeds"] = jnp.asarray(
+            rng.standard_normal((B, n, cfg.d_model)), jnp.float32)
+    elif cfg.n_enc_layers > 0:
+        batch["src_tokens"] = batch["tokens"]
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_train_step_smoke(arch, cpu_mesh, rules):
+    cfg = smoke_config(arch)
+    with cpu_mesh:
+        params, _ = build_params(cfg, rules, abstract=False)
+        opt_cfg = AdamWConfig(warmup_steps=2, total_steps=10)
+        opt = adamw_init(params, opt_cfg)
+        batch = make_batch(cfg)
+        step = jax.jit(make_train_step(cfg, rules, opt_cfg))
+        p2, o2, metrics = step(params, opt, batch)
+        loss = float(metrics["loss"])
+        assert np.isfinite(loss), f"{arch}: non-finite loss"
+        assert 0.0 < loss < 20.0
+        # params changed and stayed finite
+        delta = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                          - b.astype(jnp.float32))))
+                    for a, b in zip(jax.tree.leaves(params),
+                                    jax.tree.leaves(p2)))
+        assert delta > 0
+        for leaf in jax.tree.leaves(p2):
+            assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_forward_shapes(arch, cpu_mesh, rules):
+    cfg = smoke_config(arch)
+    with cpu_mesh:
+        params, _ = build_params(cfg, rules, abstract=False)
+        batch = make_batch(cfg, with_labels=False)
+        logits, _, aux = tfm.forward(params, cfg, rules, batch, mode="train",
+                                     remat=False)
+        assert logits.shape == (B, S, cfg.padded_vocab)
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+        assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ["qwen3_8b", "jamba_v0_1_52b", "xlstm_125m",
+                                  "h2o_danube_1_8b"])
+def test_decode_matches_full_forward(arch, cpu_mesh, rules):
+    cfg = smoke_config(arch)
+    with cpu_mesh:
+        params, _ = build_params(cfg, rules, abstract=False)
+        batch = make_batch(cfg, with_labels=False)
+        prefill = jax.jit(make_prefill_step(cfg, rules))
+        _, caches = prefill(params, batch)
+        decode = jax.jit(make_decode_step(cfg, rules))
+        new_tok = jnp.full((B, 1), 3, jnp.int32)
+        _, logits, _ = decode(params, caches, new_tok,
+                              jnp.asarray(S, jnp.int32))
+        toks2 = jnp.concatenate([batch["tokens"], new_tok], axis=1)
+        batch2 = dict(batch, tokens=toks2)
+        if cfg.modality == "audio":
+            batch2["modality_embeds"] = jnp.concatenate(
+                [batch["modality_embeds"],
+                 batch["modality_embeds"][:, -1:]], axis=1)
+        full, _, _ = tfm.forward(params, cfg, rules, batch2, mode="train",
+                                 remat=False)
+        ref = full[:, -1].astype(jnp.float32)
+        got = logits.astype(jnp.float32)
+        rel = float(jnp.max(jnp.abs(got - ref))) / (
+            float(jnp.max(jnp.abs(ref))) + 1e-9)
+        assert rel < 0.15, f"{arch}: decode mismatch {rel}"
+
+
+def test_swa_ring_buffer_beyond_window(cpu_mesh, rules):
+    """Decode past the window: ring buffer must equal a fresh windowed
+    forward pass."""
+    cfg = smoke_config("h2o_danube_1_8b")  # window 16
+    W = cfg.window
+    T = W + 8
+    rng = np.random.default_rng(5)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, T + 1)), jnp.int32)
+    with cpu_mesh:
+        params, _ = build_params(cfg, rules, abstract=False)
+        prefill = jax.jit(make_prefill_step(cfg, rules))
+        decode = jax.jit(make_decode_step(cfg, rules))
+        _, caches = prefill(params, {"tokens": toks[:, :T]})
+        _, logits, _ = decode(params, caches, toks[:, T:T + 1],
+                              jnp.asarray(T, jnp.int32))
+        full, _, _ = tfm.forward(params, cfg, rules,
+                                 {"tokens": toks}, mode="train", remat=False)
+        ref = full[:, -1].astype(jnp.float32)
+        rel = float(jnp.max(jnp.abs(logits.astype(jnp.float32) - ref))) / (
+            float(jnp.max(jnp.abs(ref))) + 1e-9)
+        assert rel < 0.15
+
+
+def test_block_patterns():
+    from repro.models.transformer import block_pattern
+    p = block_pattern(get_config("jamba-v0.1-52b"))
+    assert p.size == 8 and p.n_repeat == 4
+    assert p.kinds[4] == "attn" and p.kinds.count("mamba") == 7
+    assert p.moe == (False, True) * 4
+    p2 = block_pattern(get_config("xlstm-125m"))
+    assert p2.kinds == ("mlstm", "mlstm", "mlstm", "slstm")
+    p3 = block_pattern(get_config("llama4-maverick-400b-a17b"))
+    assert p3.size == 2 and p3.moe == (False, True)
+
+
+def test_param_counts_match_published():
+    """Total param counts should land near the published sizes."""
+    expected = {
+        "xlstm-125m": (0.10e9, 0.22e9),
+        "qwen3-8b": (7e9, 9e9),
+        "phi3-medium-14b": (12e9, 15.5e9),
+        "h2o-danube-1.8b": (1.5e9, 2.1e9),
+        "stablelm-1.6b": (1.3e9, 1.9e9),
+        "olmoe-1b-7b": (6e9, 8e9),
+        "llama4-maverick-400b-a17b": (360e9, 440e9),
+        "jamba-v0.1-52b": (45e9, 60e9),
+        "llava-next-mistral-7b": (6.5e9, 8e9),
+    }
+    for name, (lo, hi) in expected.items():
+        cfg = get_config(name)
+        n = param_counts(cfg)["total"]
+        assert lo < n < hi, f"{name}: {n/1e9:.2f}B outside [{lo/1e9}, {hi/1e9}]"
+
+
+def test_active_params_moe():
+    cfg = get_config("olmoe-1b-7b")
+    c = param_counts(cfg)
+    assert c["active"] < 0.4 * c["total"]   # 1B active of 7B total
+    cfg4 = get_config("llama4-maverick-400b-a17b")
+    c4 = param_counts(cfg4)
+    assert c4["active"] < 25e9              # ~17B active
+
+
+def test_step_flops_monotonic():
+    cfg = get_config("qwen3-8b")
+    tr = step_flops(cfg, ShapeConfig("train_4k", "train", 4096, 256))
+    pf = step_flops(cfg, ShapeConfig("prefill_32k", "prefill", 32768, 32))
+    dc = step_flops(cfg, ShapeConfig("decode_32k", "decode", 32768, 128))
+    assert tr["total"] > pf["total"] > dc["total"] > 0
+    assert tr["model_flops"] == pytest.approx(
+        6 * tr["params_active"] * 256 * 4096)
+
+
+def test_applicable_shapes_policy():
+    assert "long_500k" in applicable_shapes(get_config("xlstm-125m"))
+    assert "long_500k" in applicable_shapes(get_config("jamba-v0.1-52b"))
+    assert "long_500k" in applicable_shapes(get_config("h2o-danube-1.8b"))
+    assert "long_500k" not in applicable_shapes(get_config("qwen3-8b"))
+    assert "long_500k" not in applicable_shapes(get_config("phi3-medium-14b"))
+
+
+def test_lm_loss_masks_padded_vocab():
+    logits = jnp.zeros((1, 4, 10))
+    labels = jnp.zeros((1, 4), jnp.int32)
+    full = lm_loss(logits, labels, vocab=10)
+    masked = lm_loss(logits, labels, vocab=6)
+    assert float(masked) == pytest.approx(np.log(6), rel=1e-5)
+    assert float(full) == pytest.approx(np.log(10), rel=1e-5)

@@ -1,0 +1,139 @@
+"""Scheduler tests: Alg. 3 placement, Eq. 6 steal gating, Table II-style
+imbalance reduction, live pool execution, plan-cache behaviour."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.plan import PlanCache, plan_key
+from repro.core.scheduler import (CostModel, ScheduleSimulator, TaskSpec,
+                                  WorkStealingPool, phase_time, place_tasks)
+
+
+def imbalanced_tasks(n_workers=6, per_worker=4, heavy=2.2, light=0.5,
+                     heavy_workers=(0, 1)):
+    tasks = []
+    for w in range(n_workers):
+        c = heavy if w in heavy_workers else light
+        tasks.extend(TaskSpec(home=w, cost=c, data_bytes=32 << 20)
+                     for _ in range(per_worker))
+    return tasks
+
+
+def test_simulator_deterministic():
+    tasks = imbalanced_tasks()
+    r1 = ScheduleSimulator(6, steal=True).run(tasks)
+    r2 = ScheduleSimulator(6, steal=True).run(tasks)
+    assert r1 == r2
+
+
+def test_stealing_reduces_imbalance_and_walltime():
+    """The Table II experiment: stealing must cut imbalance and wall time."""
+    tasks = imbalanced_tasks()
+    off = ScheduleSimulator(6, steal=False).run(tasks)
+    on = ScheduleSimulator(6, steal=True).run(tasks)
+    assert on["wall_s"] < off["wall_s"]
+    assert on["imbalance_pct"] < off["imbalance_pct"] / 2
+    assert on["steals"] > 0
+    assert off["steals"] == 0
+
+
+def test_steal_gate_eq6():
+    """With steal cost above any predicted idle time, no steals happen."""
+    tasks = imbalanced_tasks()
+    cm = CostModel(steal_overhead_s=1e9)  # tau_s >> any idle
+    r = ScheduleSimulator(6, steal=True, cost_model=cm).run(tasks)
+    assert r["steals"] == 0
+
+
+def test_heterogeneous_workers():
+    """Slow workers keep their queues; fast ones absorb extra work."""
+    tasks = [TaskSpec(home=w % 4, cost=1.0) for w in range(16)]
+    fast = ScheduleSimulator(4, steal=True,
+                             speeds=[4.0, 1.0, 1.0, 1.0]).run(tasks)
+    flat = ScheduleSimulator(4, steal=True).run(tasks)
+    assert fast["wall_s"] < flat["wall_s"]
+
+
+def test_place_tasks_affinity_default():
+    tasks = [TaskSpec(home=w, cost=1.0) for w in range(8)]
+    sigma = place_tasks(tasks, 8)
+    assert sigma == list(range(8))  # data-local placement
+
+
+def test_place_tasks_rebalances_variance():
+    # all tasks homed on worker 0 -> rebalance must spread them
+    tasks = [TaskSpec(home=0, cost=1.0) for _ in range(16)]
+    sigma = place_tasks(tasks, 4, variance_threshold=0.25)
+    loads = [sigma.count(w) for w in range(4)]
+    assert max(loads) < 16  # moved something off worker 0
+    r_re = ScheduleSimulator(4, steal=False).run(tasks, sigma)
+    r_naive = ScheduleSimulator(4, steal=False).run(tasks)
+    assert r_re["wall_s"] < r_naive["wall_s"]
+
+
+def test_pool_executes_everything():
+    done = []
+    lock = threading.Lock()
+
+    def work(i):
+        with lock:
+            done.append(i)
+
+    pool = WorkStealingPool(3, steal=True)
+    for i in range(30):
+        pool.submit(TaskSpec(fn=work, args=(i,), home=i % 3, cost=0.001))
+    stats = pool.run()
+    assert sorted(done) == list(range(30))
+    assert stats["tasks"] == 30
+
+
+def test_pool_steals_under_imbalance():
+    evt = []
+
+    def slow():
+        time.sleep(0.02)
+
+    pool = WorkStealingPool(4, steal=True,
+                            cost_model=CostModel(steal_overhead_s=0.0))
+    for _ in range(12):
+        pool.submit(TaskSpec(fn=slow, home=0, cost=0.02, data_bytes=0))
+    stats = pool.run()
+    assert stats["tasks"] == 12
+    assert stats["steals"] > 0
+
+
+def test_phase_time_eq7():
+    assert phase_time(2.0, 1.0, 10, 0.01, rho=1.0) == 2.0
+    assert phase_time(1.0, 2.0, 10, 0.01, rho=0.0) == pytest.approx(2.1)
+
+
+def test_plan_cache_hit_miss():
+    cache = PlanCache()
+    key = plan_key(kind=("fft",), grid=(8, 8, 8), dtype="complex64",
+                   decomp="pencil", mesh_shape=(2, 2),
+                   mesh_axes=("data", "model"), backend="xla", n_chunks=1,
+                   inverse=False)
+    builds = []
+    e1 = cache.get_or_create(key, lambda: builds.append(1) or "exe")
+    e2 = cache.get_or_create(key, lambda: builds.append(1) or "exe")
+    assert e1 is e2
+    assert len(builds) == 1
+    assert cache.stats()["hits"] == 1 and cache.stats()["misses"] == 1
+
+
+def test_plan_cache_threadsafe():
+    cache = PlanCache()
+    key = ("k",)
+    results = []
+
+    def get():
+        results.append(cache.get_or_create(key, lambda: object()).executable)
+
+    threads = [threading.Thread(target=get) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len({id(r) for r in results}) == 1  # single winning build

@@ -1,0 +1,190 @@
+"""Optimizer / data / checkpoint / fault-tolerance substrate tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import SyntheticLM
+from repro.distributed.fault import StepWatchdog, choose_mesh_shape
+from repro.models.config import ShapeConfig
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               cosine_schedule, global_norm)
+from repro.optim.compress import (bf16_compress, error_feedback_int8_decode,
+                                  error_feedback_int8_encode)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr_peak=0.1, warmup_steps=5, total_steps=200,
+                      weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params, cfg)
+    loss_fn = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(150):
+        grads = jax.grad(loss_fn)(params)
+        params, state = adamw_update(grads, state, params, cfg)
+    assert float(loss_fn(params)) < 1e-2
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr_peak=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(cosine_schedule(cfg, jnp.asarray(s))) for s in range(100)]
+    assert lrs[0] < lrs[9]                     # warmup rising
+    assert max(lrs) == pytest.approx(1.0, rel=1e-2)
+    assert lrs[-1] < 0.01                      # cosine decayed
+
+
+def test_grad_clipping_bounds_update():
+    cfg = AdamWConfig(lr_peak=1e-3, clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params, cfg)
+    huge = {"w": jnp.full(4, 1e9)}
+    p2, _ = adamw_update(huge, state, params, cfg)
+    assert float(jnp.max(jnp.abs(p2["w"]))) < 1e-2
+
+
+def test_bf16_moments_supported():
+    cfg = AdamWConfig(moment_dtype="bfloat16")
+    params = {"w": jnp.ones(8)}
+    state = adamw_init(params, cfg)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    p2, s2 = adamw_update({"w": jnp.ones(8)}, state, params, cfg)
+    assert s2["v"]["w"].dtype == jnp.bfloat16
+    assert bool(jnp.all(jnp.isfinite(p2["w"])))
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_bf16_compress_dtype():
+    g = {"a": jnp.ones((3,), jnp.float32)}
+    assert bf16_compress(g)["a"].dtype == jnp.bfloat16
+
+
+def test_error_feedback_invariant():
+    """Sum of decoded quantized grads + final error == sum of true grads."""
+    rng = np.random.default_rng(0)
+    err = jnp.zeros(64)
+    total_true = jnp.zeros(64)
+    total_dec = jnp.zeros(64)
+    for _ in range(20):
+        g = jnp.asarray(rng.standard_normal(64), jnp.float32)
+        q, scale, err = error_feedback_int8_encode(g, err)
+        total_true += g
+        total_dec += error_feedback_int8_decode(q, scale)
+    np.testing.assert_allclose(np.asarray(total_dec + err),
+                               np.asarray(total_true), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def _small_pipe():
+    from repro.configs import smoke_config
+    cfg = smoke_config("qwen3_8b")
+    shape = ShapeConfig("t", "train", 16, 4)
+    return SyntheticLM(cfg, shape, seed=1), cfg
+
+
+def test_data_deterministic_by_step():
+    pipe, _ = _small_pipe()
+    b1 = pipe.batch_for_step(7)
+    b2 = pipe.batch_for_step(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = pipe.batch_for_step(8)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_data_labels_shifted():
+    pipe, cfg = _small_pipe()
+    b = pipe.batch_for_step(0)
+    assert b["tokens"].shape == (4, 16)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+    assert b["tokens"].max() < cfg.vocab
+
+
+# ---------------------------------------------------------------------------
+# checkpointing + fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=2)
+    state = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+             "opt": {"count": jnp.asarray(3, jnp.int32)}}
+    mgr.save(10, state)
+    step, restored = mgr.restore()
+    assert step == 10
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  np.arange(6.0).reshape(2, 3))
+    assert int(restored["opt"]["count"]) == 3
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=2)
+    for s in (1, 2, 3):
+        mgr.save(s, {"w": jnp.asarray([float(s)])})
+    assert mgr.latest_step() == 3
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(dirs) == 2  # keep_n enforced
+
+
+def test_checkpoint_skips_corrupt(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=5)
+    mgr.save(1, {"w": jnp.asarray([1.0])})
+    mgr.save(2, {"w": jnp.asarray([2.0])})
+    # corrupt the newest
+    newest = os.path.join(str(tmp_path), "step_0000000002", "w.npy")
+    with open(newest, "wb") as f:
+        f.write(b"garbage")
+    assert mgr.latest_step() == 1  # falls back to the valid one
+    step, restored = mgr.restore()
+    assert step == 1 and float(restored["w"][0]) == 1.0
+
+
+def test_checkpoint_atomicity_tmp_ignored(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    os.makedirs(os.path.join(str(tmp_path), "step_0000000009.tmp"))
+    assert mgr.latest_step() is None
+    mgr.save(1, {"w": jnp.asarray([1.0])})
+    assert mgr.latest_step() == 1
+
+
+def test_checkpoint_elastic_remesh(tmp_path, cpu_mesh):
+    """Save unsharded, restore with a mesh + pspec tree (elastic restart)."""
+    from jax.sharding import PartitionSpec as P
+    mgr = CheckpointManager(str(tmp_path))
+    state = {"w": jnp.arange(8.0)}
+    mgr.save(5, state, pspecs={"w": P(None)})
+    step, restored = mgr.restore(mesh=cpu_mesh, pspecs={"w": P(None)})
+    assert step == 5
+    assert isinstance(restored["w"], jax.Array)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(8.0))
+
+
+def test_watchdog_flags_straggler():
+    wd = StepWatchdog(tolerance=3.0, window=16)
+    import time
+    for s in range(10):
+        wd.start(s)
+        time.sleep(0.002)
+        wd.stop()
+    wd.start(10)
+    time.sleep(0.05)
+    wd.stop()
+    assert any(step == 10 for step, _ in wd.flagged)
+
+
+def test_choose_mesh_shape_elastic():
+    assert choose_mesh_shape(256, 16) == (16, 16)
+    assert choose_mesh_shape(512, 16, pod_size=256) == (2, 16, 16)
+    assert choose_mesh_shape(240, 16) == (15, 16)      # lost a node: shrink DP
+    with pytest.raises(ValueError):
+        choose_mesh_shape(8, 16)
