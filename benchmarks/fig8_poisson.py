@@ -13,7 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh
 
 from repro.core import poisson_eigenvalues, poisson_solve
 from .common import emit, time_fn
@@ -38,7 +38,7 @@ def baseline_ppp(rhs: jax.Array) -> jax.Array:
 
 
 def run() -> None:
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
+    mesh = make_mesh((1, 1), ("data", "model"),
                          axis_types=(AxisType.Auto,) * 2)
     rng = np.random.default_rng(0)
     rhs = rng.standard_normal((N, N, N)).astype(np.float32)

@@ -7,11 +7,12 @@ import traceback
 def main() -> None:
     from . import (fig5_strong_scaling, fig6_hybrid_threads, fig7_tpu_scaling,
                    fig8_poisson, fig9_overhead_breakdown, roofline_table,
-                   table1_stage_scheduler, table2_work_stealing)
+                   table1_stage_scheduler, table2_work_stealing, tuner_table)
     print("name,us_per_call,derived")
     for mod in (table1_stage_scheduler, table2_work_stealing,
                 fig5_strong_scaling, fig6_hybrid_threads, fig7_tpu_scaling,
-                fig8_poisson, fig9_overhead_breakdown, roofline_table):
+                fig8_poisson, fig9_overhead_breakdown, roofline_table,
+                tuner_table):
         try:
             mod.run()
         except Exception:

@@ -1,0 +1,40 @@
+"""Autotuner benchmark: static default vs tuned plan, per shape.
+
+For each (grid, mesh) problem the tuner enumerates the full plan space,
+prunes with the LogP/roofline model and measures the top-k survivors; this
+table reports the measured default (pencil/xla/n_chunks=1), the measured
+winner, and which plan won — the repo's analogue of the paper's "dynamic
+scheduling beats static tuning" claim, executable on whatever devices the
+process sees (run under XLA_FLAGS=--xla_force_host_platform_device_count=8
+for the multi-device picture).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit
+
+SHAPES = ((8, 8, 16), (16, 16, 32), (32, 32, 32))
+
+
+def run() -> None:
+    from repro.compat import make_mesh
+    from repro.core import TuningCache, tune
+
+    n_dev = len(jax.devices())
+    if n_dev >= 8:
+        mesh = make_mesh((2, n_dev // 2), ("data", "model"))
+    else:
+        mesh = make_mesh((1, n_dev), ("data", "model"))
+    cache = TuningCache(path=None)  # in-memory: benchmark, not wisdom
+    for grid in SHAPES:
+        plan = tune(grid, mesh, cache=cache, top_k=3)
+        label = "x".join(map(str, grid))
+        won = (f"{plan.decomp}({','.join(plan.mesh_axes)})/{plan.backend}"
+               f"/chunks={plan.n_chunks}")
+        emit(f"tuner_default_{label}", plan.baseline_s * 1e6)
+        emit(f"tuner_winner_{label}", plan.measured_s * 1e6, won)
+
+
+if __name__ == "__main__":
+    run()

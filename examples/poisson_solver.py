@@ -18,7 +18,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh
 
 
 def main():
@@ -29,7 +29,7 @@ def main():
     n = args.n
 
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((1, n_dev), ("data", "model"),
+    mesh = make_mesh((1, n_dev), ("data", "model"),
                          axis_types=(AxisType.Auto,) * 2)
     from repro.core import poisson_solve
 

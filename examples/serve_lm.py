@@ -13,7 +13,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh
 
 
 def main():
@@ -31,7 +31,7 @@ def main():
     from repro.models.transformer import pad_caches
 
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((1, n_dev), ("data", "model"),
+    mesh = make_mesh((1, n_dev), ("data", "model"),
                          axis_types=(AxisType.Auto,) * 2)
     rules = MeshRules.for_mesh(mesh)
     cfg = smoke_config(args.arch)

@@ -14,7 +14,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh
 
 
 def main():
@@ -23,7 +23,7 @@ def main():
     from repro.launch.steps import build_params, make_train_step
     from repro.optim.adamw import AdamWConfig, adamw_init
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
+    mesh = make_mesh((1, 1), ("data", "model"),
                          axis_types=(AxisType.Auto,) * 2)
     rules = MeshRules.for_mesh(mesh)
 

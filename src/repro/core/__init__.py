@@ -1,21 +1,32 @@
 # The paper's primary contribution: a distributed FFT framework with
-# stage-specific decompositions, pipelined redistribution and plan caching,
-# plus the host-side dynamic task scheduler (work stealing) it rides on.
-from .api import fft3d, ifft3d, poisson_eigenvalues, poisson_solve
+# stage-specific decompositions, pipelined redistribution, plan caching and
+# autotuned plan selection, plus the host-side dynamic task scheduler (work
+# stealing) it rides on.
+from .api import (fft2d, fft3d, fftnd, ifft2d, ifft3d, ifftnd,
+                  poisson_eigenvalues, poisson_solve)
 from .decomp import (Decomposition, Redistribution, StageLayout,
-                     local_shape, make_decomposition, pencil, slab,
-                     validate_grid)
+                     local_shape, make_decomposition, pencil, pencil_nd,
+                     slab, slab_nd, validate_grid)
 from .pipeline import (PipelineSpec, build_pipeline, compile_pipeline,
-                       make_spec)
-from .plan import GLOBAL_PLAN_CACHE, PlanCache, plan_key
+                       input_struct, make_spec)
+from .plan import (GLOBAL_PLAN_CACHE, PlanCache, TunedPlan, TuningCache,
+                   global_tuning_cache, plan_key, tuning_key)
 from .redistribute import redistribute, transpose_cost_bytes
+from .tuner import (Candidate, enumerate_candidates, measure_candidate,
+                    rank_candidates, tune)
 from . import transforms
 
 __all__ = [
-    "fft3d", "ifft3d", "poisson_solve", "poisson_eigenvalues",
+    "fft3d", "ifft3d", "fft2d", "ifft2d", "fftnd", "ifftnd",
+    "poisson_solve", "poisson_eigenvalues",
     "Decomposition", "Redistribution", "StageLayout", "local_shape",
-    "make_decomposition", "pencil", "slab", "validate_grid",
-    "PipelineSpec", "build_pipeline", "compile_pipeline", "make_spec",
+    "make_decomposition", "pencil", "pencil_nd", "slab", "slab_nd",
+    "validate_grid",
+    "PipelineSpec", "build_pipeline", "compile_pipeline", "input_struct",
+    "make_spec",
     "GLOBAL_PLAN_CACHE", "PlanCache", "plan_key",
+    "TunedPlan", "TuningCache", "global_tuning_cache", "tuning_key",
+    "Candidate", "enumerate_candidates", "measure_candidate",
+    "rank_candidates", "tune",
     "redistribute", "transpose_cost_bytes", "transforms",
 ]

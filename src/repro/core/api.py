@@ -1,15 +1,32 @@
 """User-facing DaggerFFT-style API.
 
-Mirrors the paper's §V-A surface: call ``fft3d``/``ifft3d`` on an array,
-optionally choosing decomposition ("pencil"/"slab"), transform kinds per
-dimension (C2C "fft", R2C "rfft" on x, R2R "dct2"/"dst2"), backend and the
-overlap chunk count.  Plans (compiled executables) are cached transparently.
+Mirrors the paper's §V-A surface, generalized to N-D: call ``fftnd`` (or the
+``fft2d``/``fft3d`` conveniences) on the trailing ``ndim`` dims of an array —
+leading dims are treated as replicated batch dims — optionally choosing the
+decomposition ("pencil"/"slab"), transform kinds per dimension (C2C "fft",
+R2C "rfft" on the first dim, R2R "dct2"/"dst2"), backend and the overlap
+chunk count.  Plans (compiled executables) are cached transparently.
+
+**Autotuning** (the paper's thesis — the runtime picks the schedule): pass
+``tuning=`` instead of hand-picking the knobs:
+
+* ``tuning="off"``        (default) use the explicit ``decomp``/``backend``/
+  ``n_chunks`` arguments as given;
+* ``tuning="heuristic"``  rank every valid plan with the LogP/roofline perf
+  model and take the argmin — no timing runs, no disk;
+* ``tuning="auto"``       additionally *measure* the model's top-k surviving
+  plans with compiled-executable timings and persist the winner in a JSON
+  ``TuningCache`` (``~/.cache/repro-fft/tuning.json`` or
+  ``$REPRO_TUNING_CACHE``), so later processes skip the search entirely.
 
 Example (complex-to-complex, pencil decomposition):
 
-    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    mesh = make_mesh((2, 2), ("data", "model"))
     xk = fft3d(x, mesh=mesh)                    # forward
     x2 = ifft3d(xk, mesh=mesh)                  # round-trip
+
+    yk = fft2d(y, mesh=mesh, mesh_axes=("model",))   # 2-D slab
+    zk = fftnd(z, mesh=mesh, ndim=3, tuning="auto")  # tuned batched 3-D
 
 ``poisson_solve`` is the Oceananigans-style spectral Poisson solver built on
 top (benchmarked in fig8_poisson).
@@ -21,90 +38,169 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from .decomp import make_decomposition, validate_grid
 from .pipeline import PipelineSpec, build_pipeline, compile_pipeline, make_spec
+from .plan import TuningCache
 
 _DEF_KINDS = ("fft", "fft", "fft")
+TUNING_MODES = ("off", "heuristic", "auto")
 
 
-def _default_fft_axes(mesh: Mesh, decomp: str) -> Tuple[str, ...]:
+def _default_fft_axes(mesh: Mesh, decomp: str, ndim: int) -> Tuple[str, ...]:
     """Pick mesh axes for the pencil/slab process grid."""
     names = tuple(mesh.axis_names)
-    # Prefer the canonical production axes if present.
     if decomp == "pencil":
-        if {"data", "model"}.issubset(names):
+        need = ndim - 1
+        # Prefer the canonical production axes if present.
+        if need == 2 and {"data", "model"}.issubset(names):
             return ("data", "model")
-        if len(names) < 2:
-            raise ValueError("pencil decomposition needs a >=2D mesh")
-        return names[-2:]
+        if len(names) < need:
+            raise ValueError(
+                f"pencil decomposition of {ndim} dims needs a >={need}D mesh")
+        return names[-need:]
     if "model" in names:
         return ("model",)
     return (names[-1],)
 
 
-def _prep(x_shape, mesh: Mesh, decomp: str, kinds, backend: str,
-          n_chunks: int, inverse: bool, mesh_axes) -> PipelineSpec:
-    if len(x_shape) < 3:
-        raise ValueError("fft3d expects (..., Nx, Ny, Nz)")
-    n_batch = len(x_shape) - 3
-    axes = tuple(mesh_axes) if mesh_axes else _default_fft_axes(mesh, decomp)
-    dec = make_decomposition(decomp, axes)
+def _resolve_plan(tuning: str, grid, mesh, kinds, dtype, inverse,
+                  batch_shape, decomp, backend, n_chunks, mesh_axes,
+                  tune_cache):
+    """Apply the tuning policy; returns (decomp, mesh_axes, backend, n_chunks)."""
+    if tuning not in TUNING_MODES:
+        raise ValueError(f"tuning must be one of {TUNING_MODES}, got {tuning!r}")
+    if tuning == "off":
+        return decomp, mesh_axes, backend, n_chunks
+    from .tuner import tune  # deferred: tuner imports pipeline machinery
+    plan = tune(grid, mesh, kinds=kinds, dtype=dtype, inverse=inverse,
+                batch_shape=batch_shape, mode=tuning, cache=tune_cache)
+    return plan.decomp, plan.mesh_axes, plan.backend, plan.n_chunks
+
+
+def _make_pipeline_spec(grid, mesh: Mesh, decomp: str, kinds, backend: str,
+                        n_chunks: int, inverse: bool, mesh_axes,
+                        n_batch: int) -> PipelineSpec:
+    axes = tuple(mesh_axes) if mesh_axes else _default_fft_axes(
+        mesh, decomp, len(grid))
+    dec = make_decomposition(decomp, axes, len(grid))
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    spec = make_spec(mesh, tuple(x_shape[n_batch:]), dec, tuple(kinds),
-                     backend=backend, n_chunks=n_chunks, inverse=inverse,
+    spec = make_spec(mesh, tuple(grid), dec, tuple(kinds), backend=backend,
+                     n_chunks=n_chunks, inverse=inverse,
                      batch_spec=(None,) * n_batch)
-    if inverse:
-        validate_grid(dec, spec.eff_grid, axis_sizes)
-    else:
-        validate_grid(dec, spec.eff_grid, axis_sizes)
+    validate_grid(dec, spec.eff_grid, axis_sizes)
     return spec
 
 
-def fft3d(x: jax.Array, *, mesh: Mesh, decomp: str = "pencil",
-          kinds: Sequence[str] = _DEF_KINDS, backend: str = "xla",
-          n_chunks: int = 1, mesh_axes: Optional[Sequence[str]] = None,
-          precompiled: bool = True) -> jax.Array:
-    """Distributed forward 3D transform of the trailing three dims of x."""
-    spec = _prep(x.shape, mesh, decomp, kinds, backend, n_chunks, False,
-                 mesh_axes)
-    if kinds[0] != "rfft" and not jnp.iscomplexobj(x) and "dct2" not in kinds \
-            and "dst2" not in kinds:
-        x = x.astype(jnp.complex64)
+def _run(x: jax.Array, mesh: Mesh, spec: PipelineSpec, n_batch: int,
+         precompiled: bool) -> jax.Array:
     if precompiled:
-        exe = compile_pipeline(mesh, spec, batch_shape=x.shape[:-3],
+        exe = compile_pipeline(mesh, spec, batch_shape=x.shape[:n_batch],
                                dtype=x.dtype)
         x = jax.device_put(x, NamedSharding(mesh, spec.in_spec()))
         return exe(x)
     return jax.jit(build_pipeline(mesh, spec))(x)
 
 
+def fftnd(x: jax.Array, *, mesh: Mesh, ndim: Optional[int] = None,
+          decomp: str = "pencil", kinds: Optional[Sequence[str]] = None,
+          backend: str = "xla", n_chunks: int = 1,
+          mesh_axes: Optional[Sequence[str]] = None, tuning: str = "off",
+          tune_cache: Optional[TuningCache] = None,
+          precompiled: bool = True) -> jax.Array:
+    """Distributed forward N-D transform of the trailing ``ndim`` dims of x.
+
+    Leading ``x.ndim - ndim`` dims are batch dims (replicated across the
+    mesh).  ``ndim`` defaults to ``x.ndim`` (transform everything).
+    """
+    ndim = x.ndim if ndim is None else ndim
+    if ndim < 2:
+        raise ValueError("fftnd needs >= 2 transform dims (use jnp.fft.fft)")
+    if x.ndim < ndim:
+        raise ValueError(f"fftnd: ndim={ndim} but input has {x.ndim} dims")
+    kinds = tuple(kinds) if kinds is not None else ("fft",) * ndim
+    if len(kinds) != ndim:
+        raise ValueError(f"fftnd: {len(kinds)} kinds for ndim={ndim}")
+    n_batch = x.ndim - ndim
+    grid = tuple(x.shape[n_batch:])
+    if kinds[0] != "rfft" and not jnp.iscomplexobj(x) \
+            and not any(k in ("dct2", "dst2") for k in kinds):
+        x = x.astype(jnp.complex64)
+    decomp, mesh_axes, backend, n_chunks = _resolve_plan(
+        tuning, grid, mesh, kinds, x.dtype, False, x.shape[:n_batch],
+        decomp, backend, n_chunks, mesh_axes, tune_cache)
+    spec = _make_pipeline_spec(grid, mesh, decomp, kinds, backend, n_chunks,
+                               False, mesh_axes, n_batch)
+    return _run(x, mesh, spec, n_batch, precompiled)
+
+
+def ifftnd(x: jax.Array, *, mesh: Mesh, ndim: Optional[int] = None,
+           grid: Optional[Tuple[int, ...]] = None, decomp: str = "pencil",
+           kinds: Optional[Sequence[str]] = None, backend: str = "xla",
+           n_chunks: int = 1, mesh_axes: Optional[Sequence[str]] = None,
+           tuning: str = "off", tune_cache: Optional[TuningCache] = None,
+           precompiled: bool = True) -> jax.Array:
+    """Inverse of ``fftnd``.  ``kinds`` are the FORWARD kinds.
+
+    For R2C pipelines pass ``grid`` = the original real-space grid (the
+    frequency dim of ``x`` is padded, so it cannot be inferred).
+    """
+    ndim = (x.ndim if grid is None else len(grid)) if ndim is None else ndim
+    if ndim < 2:
+        raise ValueError("ifftnd needs >= 2 transform dims (use jnp.fft.ifft)")
+    if x.ndim < ndim:
+        raise ValueError(f"ifftnd: ndim={ndim} but input has {x.ndim} dims")
+    n_batch = x.ndim - ndim
+    kinds = tuple(kinds) if kinds is not None else ("fft",) * ndim
+    if len(kinds) != ndim:
+        raise ValueError(f"ifftnd: {len(kinds)} kinds for ndim={ndim}")
+    logical = tuple(grid) if grid is not None else tuple(x.shape[n_batch:])
+    decomp, mesh_axes, backend, n_chunks = _resolve_plan(
+        tuning, logical, mesh, kinds, x.dtype, True, x.shape[:n_batch],
+        decomp, backend, n_chunks, mesh_axes, tune_cache)
+    spec = _make_pipeline_spec(logical, mesh, decomp, kinds, backend,
+                               n_chunks, True, mesh_axes, n_batch)
+    return _run(x, mesh, spec, n_batch, precompiled)
+
+
+def fft2d(x: jax.Array, *, mesh: Mesh, **kw) -> jax.Array:
+    """Distributed forward 2D transform of the trailing two dims of x."""
+    return fftnd(x, mesh=mesh, ndim=2, **kw)
+
+
+def ifft2d(x: jax.Array, *, mesh: Mesh, **kw) -> jax.Array:
+    """Inverse of ``fft2d``."""
+    return ifftnd(x, mesh=mesh, ndim=2, **kw)
+
+
+def fft3d(x: jax.Array, *, mesh: Mesh, decomp: str = "pencil",
+          kinds: Sequence[str] = _DEF_KINDS, backend: str = "xla",
+          n_chunks: int = 1, mesh_axes: Optional[Sequence[str]] = None,
+          tuning: str = "off", tune_cache: Optional[TuningCache] = None,
+          precompiled: bool = True) -> jax.Array:
+    """Distributed forward 3D transform of the trailing three dims of x."""
+    return fftnd(x, mesh=mesh, ndim=3, decomp=decomp, kinds=kinds,
+                 backend=backend, n_chunks=n_chunks, mesh_axes=mesh_axes,
+                 tuning=tuning, tune_cache=tune_cache,
+                 precompiled=precompiled)
+
+
 def ifft3d(x: jax.Array, *, mesh: Mesh, grid: Optional[Tuple[int, int, int]] = None,
            decomp: str = "pencil", kinds: Sequence[str] = _DEF_KINDS,
            backend: str = "xla", n_chunks: int = 1,
-           mesh_axes: Optional[Sequence[str]] = None,
+           mesh_axes: Optional[Sequence[str]] = None, tuning: str = "off",
+           tune_cache: Optional[TuningCache] = None,
            precompiled: bool = True) -> jax.Array:
     """Inverse of ``fft3d``.  ``kinds`` are the FORWARD kinds.
 
     For R2C pipelines pass ``grid`` = the original real-space grid (the
     frequency dim of ``x`` is padded, so it cannot be inferred).
     """
-    n_batch = x.ndim - 3
-    logical = tuple(grid) if grid is not None else tuple(x.shape[n_batch:])
-    axes = tuple(mesh_axes) if mesh_axes else _default_fft_axes(mesh, decomp)
-    dec = make_decomposition(decomp, axes)
-    spec = make_spec(mesh, logical, dec, tuple(kinds), backend=backend,
-                     n_chunks=n_chunks, inverse=True,
-                     batch_spec=(None,) * n_batch)
-    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    validate_grid(dec, spec.eff_grid, axis_sizes)
-    if precompiled:
-        exe = compile_pipeline(mesh, spec, batch_shape=x.shape[:-3],
-                               dtype=x.dtype)
-        x = jax.device_put(x, NamedSharding(mesh, spec.in_spec()))
-        return exe(x)
-    return jax.jit(build_pipeline(mesh, spec))(x)
+    return ifftnd(x, mesh=mesh, ndim=3, grid=grid, decomp=decomp,
+                  kinds=kinds, backend=backend, n_chunks=n_chunks,
+                  mesh_axes=mesh_axes, tuning=tuning, tune_cache=tune_cache,
+                  precompiled=precompiled)
 
 
 def poisson_eigenvalues(n: int, length: float = 2 * np.pi,
@@ -122,7 +218,7 @@ def poisson_solve(rhs: jax.Array, *, mesh: Mesh,
                   topology: Tuple[str, str, str] = ("periodic",) * 3,
                   lengths: Tuple[float, ...] = (2 * np.pi,) * 3,
                   decomp: str = "pencil", backend: str = "xla",
-                  n_chunks: int = 1) -> jax.Array:
+                  n_chunks: int = 1, tuning: str = "off") -> jax.Array:
     """Solve lap(phi) = rhs spectrally on a (Periodic|Bounded)^3 box.
 
     Periodic dims use C2C FFTs; Bounded dims use DCT-II (homogeneous Neumann),
@@ -132,7 +228,7 @@ def poisson_solve(rhs: jax.Array, *, mesh: Mesh,
     kinds = tuple("fft" if t == "periodic" else "dct2" for t in topology)
     xk = fft3d(rhs.astype(jnp.complex64) if "fft" in kinds else rhs,
                mesh=mesh, decomp=decomp, kinds=kinds, backend=backend,
-               n_chunks=n_chunks)
+               n_chunks=n_chunks, tuning=tuning)
     lams = [
         poisson_eigenvalues(n, l, t)
         for n, l, t in zip(grid, lengths, topology)
@@ -147,7 +243,7 @@ def poisson_solve(rhs: jax.Array, *, mesh: Mesh,
     zero = jnp.zeros((), scaled.dtype)
     scaled = scaled.at[(0,) * scaled.ndim].set(zero)
     phi = ifft3d(scaled, mesh=mesh, grid=grid, decomp=decomp, kinds=kinds,
-                 backend=backend, n_chunks=n_chunks)
+                 backend=backend, n_chunks=n_chunks, tuning=tuning)
     if not jnp.iscomplexobj(rhs):
         phi = jnp.real(phi)
     return phi

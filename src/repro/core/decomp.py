@@ -1,13 +1,20 @@
-"""Decomposition descriptors for distributed FFTs.
+"""Decomposition descriptors for distributed FFTs (N-D).
 
 The paper's central structural idea (Alg. 1) is that each FFT stage owns its
-own distributed array with a *stage-specific* layout:
+own distributed array with a *stage-specific* layout.  In 3-D:
 
   pencil:  D1 = (X full,   Y/Py,    Z/Pz)   -> x-FFT local
            D2 = (X/Py,     Y full,  Z/Pz)   -> y-FFT local
            D3 = (X/Py,     Y/Pz,    Z full) -> z-FFT local
   slab:    D1 = (X full,   Y full,  Z/P)    -> 2D xy-FFT local
            D3 = (X/P,      Y full,  Z full) -> z-FFT local
+
+Both schemes generalize to N spatial dims: a pencil decomposition over
+``ndim-1`` mesh axes runs ``ndim`` one-dim stages (stage ``i`` transforms
+dim ``i``; the other dims are sharded by the axes in order), a slab
+decomposition over one axis runs a local ``(ndim-1)``-dim transform then one
+transpose and the final-dim transform.  ``fft2d``/``fftnd`` and the plan
+autotuner both build on this.
 
 A ``StageLayout`` records which mesh axis shards which array dimension; a
 ``Redistribution`` records the all_to_all that moves one layout to the next.
@@ -33,7 +40,7 @@ class StageLayout:
     must be unsharded (None) in ``spec``.
     """
 
-    spec: Tuple[Axis, Axis, Axis]
+    spec: Tuple[Axis, ...]
     fft_dims: Tuple[int, ...]
 
     def __post_init__(self):
@@ -85,58 +92,79 @@ class Decomposition:
             raise ValueError("need exactly one redistribution between stages")
 
 
-def pencil(ay: str = "data", az: str = "model") -> Decomposition:
-    """2D pencil decomposition over mesh axes (ay, az).
+def pencil_nd(mesh_axes: Sequence[str], ndim: int) -> Decomposition:
+    """Pencil decomposition of ``ndim`` spatial dims over ``ndim-1`` axes.
 
-    Matches Alg. 1: three stages, two transposes.  The x<->y transpose runs
-    over ``ay`` (groups that share a z-slab), the y<->z transpose over ``az``.
+    Stage ``i`` transforms dim ``i`` locally; the dims before it are sharded
+    by the leading mesh axes, the dims after it by the trailing ones.  For
+    ndim=3 this is exactly Alg. 1: three stages, two transposes (the x<->y
+    transpose over ``mesh_axes[0]``, the y<->z transpose over
+    ``mesh_axes[1]``).  For ndim=2 it degenerates to a single transpose over
+    one axis (structurally the 2-D slab).
     """
-    return Decomposition(
-        name="pencil",
-        mesh_axes=(ay, az),
-        stages=(
-            StageLayout(spec=(None, ay, az), fft_dims=(0,)),   # D1: x-FFT
-            StageLayout(spec=(ay, None, az), fft_dims=(1,)),   # D2: y-FFT
-            StageLayout(spec=(ay, az, None), fft_dims=(2,)),   # D3: z-FFT
-        ),
-        redists=(
-            Redistribution(mesh_axis=ay, split_dim=0, concat_dim=1),
-            Redistribution(mesh_axis=az, split_dim=1, concat_dim=2),
-        ),
+    axes = tuple(mesh_axes)
+    if len(axes) != ndim - 1:
+        raise ValueError(
+            f"pencil over {ndim} dims needs {ndim - 1} mesh axes, "
+            f"got {axes!r}")
+    stages = tuple(
+        StageLayout(spec=axes[:i] + (None,) + axes[i:], fft_dims=(i,))
+        for i in range(ndim)
     )
+    redists = tuple(
+        Redistribution(mesh_axis=axes[i], split_dim=i, concat_dim=i + 1)
+        for i in range(ndim - 1)
+    )
+    return Decomposition(name="pencil", mesh_axes=axes, stages=stages,
+                         redists=redists)
 
 
-def slab(a: str = "data") -> Decomposition:
-    """1D slab decomposition over mesh axis ``a``.
+def slab_nd(a: str, ndim: int) -> Decomposition:
+    """Slab decomposition of ``ndim`` spatial dims over one mesh axis.
 
-    Two stages: a local 2D xy-FFT on full slabs, one transpose, then the
-    z-FFT.  Scalability is bounded by Nz >= |a| (the paper's §II-A caveat);
-    ``validate_grid`` enforces it.
+    Two stages: a local ``(ndim-1)``-dim transform on full slabs, one
+    transpose, then the final-dim transform.  Scalability is bounded by
+    ``N_last >= |a|`` (the paper's §II-A caveat); ``validate_grid``
+    enforces it.
     """
+    if ndim < 2:
+        raise ValueError("slab decomposition needs >= 2 spatial dims")
     return Decomposition(
         name="slab",
         mesh_axes=(a,),
         stages=(
-            StageLayout(spec=(None, None, a), fft_dims=(0, 1)),  # 2D xy-FFT
-            StageLayout(spec=(a, None, None), fft_dims=(2,)),    # z-FFT
+            StageLayout(spec=(None,) * (ndim - 1) + (a,),
+                        fft_dims=tuple(range(ndim - 1))),
+            StageLayout(spec=(a,) + (None,) * (ndim - 1),
+                        fft_dims=(ndim - 1,)),
         ),
-        redists=(Redistribution(mesh_axis=a, split_dim=0, concat_dim=2),),
+        redists=(Redistribution(mesh_axis=a, split_dim=0,
+                                concat_dim=ndim - 1),),
     )
 
 
-def make_decomposition(kind: str, mesh_axes: Sequence[str]) -> Decomposition:
+def pencil(ay: str = "data", az: str = "model") -> Decomposition:
+    """The paper's 3-D pencil (Alg. 1): see :func:`pencil_nd`."""
+    return pencil_nd((ay, az), 3)
+
+
+def slab(a: str = "data") -> Decomposition:
+    """The paper's 3-D slab: see :func:`slab_nd`."""
+    return slab_nd(a, 3)
+
+
+def make_decomposition(kind: str, mesh_axes: Sequence[str],
+                       ndim: int = 3) -> Decomposition:
     if kind == "pencil":
-        if len(mesh_axes) != 2:
-            raise ValueError("pencil decomposition needs two mesh axes")
-        return pencil(*mesh_axes)
+        return pencil_nd(mesh_axes, ndim)
     if kind == "slab":
         if len(mesh_axes) != 1:
             raise ValueError("slab decomposition needs one mesh axis")
-        return slab(*mesh_axes)
+        return slab_nd(mesh_axes[0], ndim)
     raise ValueError(f"unknown decomposition kind: {kind!r}")
 
 
-def validate_grid(decomp: Decomposition, grid: Tuple[int, int, int],
+def validate_grid(decomp: Decomposition, grid: Tuple[int, ...],
                   axis_sizes: dict) -> None:
     """Check every stage's local block has integral shape on this mesh."""
     for stage in decomp.stages:
@@ -151,8 +179,8 @@ def validate_grid(decomp: Decomposition, grid: Tuple[int, int, int],
                 )
 
 
-def local_shape(stage: StageLayout, grid: Tuple[int, int, int],
-                axis_sizes: dict) -> Tuple[int, int, int]:
+def local_shape(stage: StageLayout, grid: Tuple[int, ...],
+                axis_sizes: dict) -> Tuple[int, ...]:
     """Per-device block shape of this stage's DArray."""
     return tuple(
         n if ax is None else n // axis_sizes[ax]

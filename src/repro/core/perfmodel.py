@@ -99,6 +99,94 @@ def predict_fft_time(grid: Tuple[int, int, int], decomp: Decomposition,
     }
 
 
+def matmul_stage_flops(grid: Tuple[int, ...], dims: Sequence[int]) -> float:
+    """FLOPs of one local stage on the four-step matmul backend.
+
+    Per line of length n = n1*n2 the four-step path does two complex
+    matmuls (n*(n1+n2) complex MACs) plus the twiddle: ~8 real FLOPs per
+    complex MAC.  This is what makes the backend an autotuning decision —
+    more raw FLOPs than 5*n*log2(n) butterflies, but MXU-shaped.
+    """
+    from .transforms import factorize
+
+    total = 0.0
+    n_all = 1
+    for g in grid:
+        n_all *= g
+    for d in dims:
+        n = grid[d]
+        n1, n2 = factorize(n)
+        lines = n_all / n
+        total += lines * 8.0 * n * (n1 + n2)
+    return total
+
+
+def chunk_overlap_fraction(n_chunks: int) -> float:
+    """Fraction of comm/compute overlap the chunked pipeline exposes.
+
+    With n chunks, chunk k's collective runs under chunk k-1's FFT work, so
+    all but one chunk round of the shorter phase hides: (n-1)/n.  n<=1 is
+    the bulk-synchronous baseline (no overlap beyond what the machine model
+    already grants).
+    """
+    if n_chunks <= 1:
+        return 0.0
+    return (n_chunks - 1) / n_chunks
+
+
+def predict_plan_time(grid: Tuple[int, ...], decomp: Decomposition,
+                      axis_sizes: Dict[str, int], machine: Machine, *,
+                      backend: str = "xla", n_chunks: int = 1,
+                      dtype_bytes: int = 8,
+                      sched_overhead_s: float = 0.0) -> Dict[str, float]:
+    """LogP/roofline prediction for one *candidate plan* (tuner pruning).
+
+    Extends :func:`predict_fft_time` with the two knobs the autotuner
+    searches over: the local-FFT ``backend`` (flop count differs) and
+    ``n_chunks`` (more overlap, but ``n_chunks``x the per-message alpha
+    cost).  The machine's own ``overlap`` floor still applies.
+    """
+    ranks = 1
+    for a in decomp.mesh_axes:
+        ranks *= axis_sizes[a]
+
+    stage_flops = (matmul_stage_flops if backend == "matmul"
+                   else fft_stage_flops)
+
+    t_comp = 0.0
+    for stage in decomp.stages:
+        flops = stage_flops(grid, stage.fft_dims) / ranks
+        shape = local_shape(stage, grid, axis_sizes)
+        touched = 2 * dtype_bytes
+        for s in shape:
+            touched *= s
+        t_comp += max(flops / machine.flops, touched / machine.mem_bw)
+
+    t_comm = 0.0
+    n_msgs = 0.0
+    for stage, redist in zip(decomp.stages, decomp.redists):
+        shape = local_shape(stage, grid, axis_sizes)
+        peers = axis_sizes[redist.mesh_axis]
+        vol = transpose_cost_bytes(shape, dtype_bytes, peers)
+        t_comm += (machine.net_alpha_s * (peers - 1) * n_chunks
+                   + vol / machine.net_bw)
+        n_msgs += (peers - 1) * n_chunks
+
+    overlap = max(machine.overlap, chunk_overlap_fraction(n_chunks))
+    bulk = t_comp + t_comm
+    overlapped = max(t_comp, t_comm)
+    total = (1 - overlap) * bulk + overlap * overlapped
+    return {
+        "t_comp_s": t_comp,
+        "t_comm_s": t_comm,
+        "t_total_s": total + sched_overhead_s,
+        "t_sched_s": sched_overhead_s,
+        "messages": n_msgs,
+        "ranks": ranks,
+        "overlap": overlap,
+    }
+
+
 def strong_scaling_curve(grid, decomp_factory, rank_list, machine,
                          **kw) -> Dict[int, Dict[str, float]]:
     """predict_fft_time across rank counts; decomp_factory(ranks)->(decomp, axis_sizes)."""

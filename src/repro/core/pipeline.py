@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from . import transforms
 from .decomp import Decomposition, Redistribution, StageLayout, local_shape
 from .plan import GLOBAL_PLAN_CACHE, plan_key
@@ -37,10 +38,10 @@ R2R_INV_SCALE = {"dct3", "dst3"}
 
 @dataclasses.dataclass(frozen=True)
 class PipelineSpec:
-    grid: Tuple[int, int, int]          # logical (pre-padding) grid
-    eff_grid: Tuple[int, int, int]      # grid after R2C frequency padding
+    grid: Tuple[int, ...]               # logical (pre-padding) grid
+    eff_grid: Tuple[int, ...]           # grid after R2C frequency padding
     decomp: Decomposition
-    kinds: Tuple[str, str, str]
+    kinds: Tuple[str, ...]              # one transform kind per spatial dim
     backend: str
     n_chunks: int
     inverse: bool
@@ -82,8 +83,8 @@ def _freq_pad_target(decomp: Decomposition, axis_sizes: dict, nfreq: int) -> int
     return ((nfreq + divisor - 1) // divisor) * divisor
 
 
-def make_spec(mesh: Mesh, grid: Tuple[int, int, int], decomp: Decomposition,
-              kinds: Tuple[str, str, str], *, backend: str = "xla",
+def make_spec(mesh: Mesh, grid: Tuple[int, ...], decomp: Decomposition,
+              kinds: Tuple[str, ...], *, backend: str = "xla",
               n_chunks: int = 1, inverse: bool = False,
               batch_spec: Tuple[Optional[str], ...] = ()) -> PipelineSpec:
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -147,25 +148,39 @@ def _local_pipeline(spec: PipelineSpec) -> Callable:
 
 def build_pipeline(mesh: Mesh, spec: PipelineSpec) -> Callable:
     """shard_map the local pipeline over the mesh.  jit-compatible."""
-    fn = jax.shard_map(_local_pipeline(spec), mesh=mesh,
-                       in_specs=spec.in_spec(), out_specs=spec.out_spec(),
-                       check_vma=False)
+    fn = shard_map(_local_pipeline(spec), mesh=mesh,
+                   in_specs=spec.in_spec(), out_specs=spec.out_spec(),
+                   check_vma=False)
     return fn
+
+
+def input_struct(mesh: Mesh, spec: PipelineSpec,
+                 batch_shape: Tuple[int, ...] = (),
+                 dtype=jnp.complex64) -> jax.ShapeDtypeStruct:
+    """Shape/dtype/sharding of the pipeline's input array.
+
+    Shared by compilation and by the autotuner's measurement harness (which
+    must synthesize a correctly-sharded input for each candidate plan).
+    """
+    in_grid = spec.eff_grid if spec.inverse else spec.grid
+    if not spec.inverse and spec.kinds[0] == "rfft":
+        dtype = jnp.float32
+    shape = tuple(batch_shape) + tuple(in_grid)
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=NamedSharding(mesh, spec.in_spec()))
 
 
 def compile_pipeline(mesh: Mesh, spec: PipelineSpec,
                      batch_shape: Tuple[int, ...] = (),
                      dtype=jnp.complex64, *, use_cache: bool = True):
     """Lower+compile the pipeline once and cache it (paper's plan cache)."""
-    in_grid = spec.eff_grid if spec.inverse else spec.grid
-    if not spec.inverse and spec.kinds[0] == "rfft":
-        dtype = jnp.float32
-    shape = tuple(batch_shape) + tuple(in_grid)
-    arg = jax.ShapeDtypeStruct(
-        shape, dtype, sharding=NamedSharding(mesh, spec.in_spec()))
+    arg = input_struct(mesh, spec, batch_shape, dtype)
+    dtype = arg.dtype
 
+    # The decomposition's own axis ordering is part of the key: pencil over
+    # ("data", "model") and ("model", "data") compile to different shardings.
     key = plan_key(kind=spec.kinds, grid=spec.grid, dtype=str(dtype),
-                   decomp=spec.decomp.name,
+                   decomp=(spec.decomp.name,) + tuple(spec.decomp.mesh_axes),
                    mesh_shape=tuple(mesh.devices.shape),
                    mesh_axes=tuple(mesh.axis_names), backend=spec.backend,
                    n_chunks=spec.n_chunks, inverse=spec.inverse,

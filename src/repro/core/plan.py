@@ -9,13 +9,20 @@ so repeated transforms of identically-shaped chunks never re-plan.
 The cache also keeps hit/miss counters: benchmarks reproduce the paper's
 claim that plan reuse removes per-call planning latency, and tests assert
 that a second identical call is a cache hit.
+
+``TuningCache`` is the second, *persistent* layer: compiled executables
+cannot survive the process, but the autotuner's **decisions** (which decomp
+/ backend / n_chunks won for a given problem key) can, as JSON on disk — the
+FFTW-wisdom analogue.  ``tune()`` consults it before measuring anything.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import threading
 import time
-from typing import Any, Callable, Dict, Hashable, Optional, Tuple
+from typing import Any, Callable, Dict, Hashable, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass
@@ -81,8 +88,158 @@ class PlanCache:
 GLOBAL_PLAN_CACHE = PlanCache()
 
 
+@dataclasses.dataclass(frozen=True)
+class TunedPlan:
+    """The autotuner's decision for one problem key (JSON-serializable)."""
+
+    decomp: str                  # "pencil" | "slab"
+    mesh_axes: Tuple[str, ...]   # mesh axes the decomposition runs over
+    backend: str                 # "xla" | "matmul"
+    n_chunks: int
+    predicted_s: float           # perfmodel estimate
+    measured_s: float            # compiled-executable timing (0.0 if none)
+    source: str                  # "measured" | "heuristic" | "default"
+    baseline_s: float = 0.0      # static default's time in the same run
+
+    def to_json(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["mesh_axes"] = list(self.mesh_axes)
+        return d
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "TunedPlan":
+        return cls(decomp=d["decomp"], mesh_axes=tuple(d["mesh_axes"]),
+                   backend=d["backend"], n_chunks=int(d["n_chunks"]),
+                   predicted_s=float(d.get("predicted_s", 0.0)),
+                   measured_s=float(d.get("measured_s", 0.0)),
+                   source=d.get("source", "measured"),
+                   baseline_s=float(d.get("baseline_s", 0.0)))
+
+
+def tuning_key(*, grid: Sequence[int], mesh_shape: Sequence[int],
+               mesh_axes: Sequence[str], kinds: Sequence[str], dtype: str,
+               inverse: bool, batch_shape: Sequence[int] = (),
+               platform: str = "") -> str:
+    """Stable string key for one tuning problem (usable as a JSON key).
+
+    ``platform`` (e.g. "cpu"/"tpu") keeps wisdom tuned on one device kind
+    from being served to another via the shared on-disk cache.
+    """
+    parts = [
+        "grid=" + ",".join(map(str, grid)),
+        "mesh=" + ",".join(map(str, mesh_shape)),
+        "axes=" + ",".join(mesh_axes),
+        "kinds=" + ",".join(kinds),
+        "dtype=" + dtype,
+        "inv=" + str(int(inverse)),
+        "batch=" + ",".join(map(str, batch_shape)),
+        "plat=" + platform,
+    ]
+    return ";".join(parts)
+
+
+def default_tuning_path() -> str:
+    env = os.environ.get("REPRO_TUNING_CACHE")
+    if env:
+        return env
+    base = os.environ.get("XDG_CACHE_HOME",
+                          os.path.join(os.path.expanduser("~"), ".cache"))
+    return os.path.join(base, "repro-fft", "tuning.json")
+
+
+class TuningCache:
+    """Persistent key -> :class:`TunedPlan` store (FFTW-wisdom analogue).
+
+    ``path=None`` keeps the cache in-memory only (tests, throwaway runs).
+    Writes go through an atomic rename so a crashed process never leaves a
+    torn JSON file behind.
+    """
+
+    _VERSION = 1
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._lock = threading.Lock()
+        self._plans: Dict[str, TunedPlan] = {}
+        self.hits = 0
+        self.misses = 0
+        if path is not None:
+            self._load()
+
+    def _load(self) -> None:
+        try:
+            with open(self.path) as f:
+                raw = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return
+        if raw.get("version") != self._VERSION:
+            return  # stale schema: retune rather than misread
+        for k, v in raw.get("plans", {}).items():
+            try:
+                self._plans[k] = TunedPlan.from_json(v)
+            except (KeyError, TypeError, ValueError):
+                continue
+
+    def _save(self) -> None:
+        if self.path is None:
+            return
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        payload = {
+            "version": self._VERSION,
+            "plans": {k: p.to_json() for k, p in self._plans.items()},
+        }
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    def get(self, key: str) -> Optional[TunedPlan]:
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            return plan
+
+    def put(self, key: str, plan: TunedPlan) -> None:
+        with self._lock:
+            self._plans[key] = plan
+            self._save()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._plans)
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {"plans": len(self._plans), "hits": self.hits,
+                    "misses": self.misses, "path": self.path}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._plans.clear()
+            self.hits = 0
+            self.misses = 0
+            self._save()
+
+
+# Lazily-created process-global tuning cache (persisted under
+# ``default_tuning_path()``; override with the REPRO_TUNING_CACHE env var).
+_GLOBAL_TUNING_CACHE: Optional[TuningCache] = None
+_GLOBAL_TUNING_LOCK = threading.Lock()
+
+
+def global_tuning_cache() -> TuningCache:
+    global _GLOBAL_TUNING_CACHE
+    with _GLOBAL_TUNING_LOCK:
+        if _GLOBAL_TUNING_CACHE is None:
+            _GLOBAL_TUNING_CACHE = TuningCache(default_tuning_path())
+        return _GLOBAL_TUNING_CACHE
+
+
 def plan_key(*, kind: Tuple[str, ...], grid: Tuple[int, ...], dtype: str,
-             decomp: str, mesh_shape: Tuple[int, ...],
+             decomp: Hashable, mesh_shape: Tuple[int, ...],
              mesh_axes: Tuple[str, ...], backend: str, n_chunks: int,
              inverse: bool, extra: Optional[Hashable] = None) -> Hashable:
     return (kind, grid, dtype, decomp, mesh_shape, mesh_axes, backend,

@@ -28,7 +28,7 @@ from jax import lax
 from .decomp import Redistribution
 
 
-def _free_chunk_dim(redist: Redistribution, ndim: int, offset: int) -> int:
+def free_chunk_dim(redist: Redistribution, ndim: int, offset: int) -> int:
     """Pick a dim (absolute index) that is not part of the exchange."""
     busy = {redist.split_dim + offset, redist.concat_dim + offset}
     # Prefer the last spatial dim (largest stride locality for packing).
@@ -64,7 +64,7 @@ def redistribute(block: jax.Array, redist: Redistribution, *,
         out = a2a(block)
         return then(out) if then is not None else out
 
-    chunk_dim = _free_chunk_dim(redist, block.ndim, spatial_offset)
+    chunk_dim = free_chunk_dim(redist, block.ndim, spatial_offset)
     size = block.shape[chunk_dim]
     if size % n_chunks != 0:
         raise ValueError(

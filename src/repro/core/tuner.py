@@ -1,0 +1,277 @@
+"""Plan autotuner: the runtime picks the schedule (the paper's thesis).
+
+The static API defaults (``decomp="pencil"``, ``backend="xla"``,
+``n_chunks=1``) are exactly the hard-coded knobs the paper argues a dynamic
+runtime should choose.  ``tune()`` closes that loop for one problem key
+(global grid, mesh geometry, transform kinds, dtype, batch shape):
+
+1. **enumerate** candidate plans — decomposition in {pencil, slab} over
+   every mesh-axis ordering that divides the grid, backend in
+   {xla, matmul}, ``n_chunks`` in powers of two up to the free-dim size;
+2. **prune** them with the LogP/roofline model (`perfmodel.predict_plan_time`)
+   down to the ``top_k`` most promising survivors;
+3. **measure** each survivor's compiled executable (the measurement also
+   warms the in-process `PlanCache`, so the winning plan is free to call
+   afterwards), always including the static default as the baseline so the
+   winner can never regress it;
+4. **record** the winner in a persistent JSON `TuningCache` keyed by the
+   problem, the FFTW-wisdom analogue — later processes skip straight to 4.
+
+``fft3d``/``fftnd`` consult this transparently via ``tuning="auto"``
+(enumerate+measure, persistent) or ``tuning="heuristic"`` (model-only
+argmin, no timing, no disk).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from .decomp import local_shape, make_decomposition, validate_grid
+from .perfmodel import CPU_CORE, TPU_V5E, Machine, predict_plan_time
+from .pipeline import PipelineSpec, compile_pipeline, input_struct, make_spec
+from .plan import (TunedPlan, TuningCache, global_tuning_cache, tuning_key)
+from .redistribute import free_chunk_dim
+
+BACKENDS = ("xla", "matmul")
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the tuner's search space."""
+
+    decomp: str
+    mesh_axes: Tuple[str, ...]
+    backend: str
+    n_chunks: int
+
+    def describe(self) -> str:
+        return (f"{self.decomp}({','.join(self.mesh_axes)})/"
+                f"{self.backend}/chunks={self.n_chunks}")
+
+
+def default_machine() -> Machine:
+    """Machine constants for the pruning model, matched to the runtime."""
+    return TPU_V5E if jax.default_backend() == "tpu" else CPU_CORE
+
+
+def _spec_for(mesh: Mesh, grid: Tuple[int, ...], cand_decomp: str,
+              mesh_axes: Tuple[str, ...], kinds: Tuple[str, ...],
+              backend: str, n_chunks: int, inverse: bool,
+              n_batch: int) -> PipelineSpec:
+    dec = make_decomposition(cand_decomp, mesh_axes, len(grid))
+    return make_spec(mesh, grid, dec, kinds, backend=backend,
+                     n_chunks=n_chunks, inverse=inverse,
+                     batch_spec=(None,) * n_batch)
+
+
+def feasible_chunk_counts(spec: PipelineSpec, axis_sizes: Dict[str, int],
+                          batch_shape: Tuple[int, ...] = (),
+                          max_chunks: Optional[int] = None) -> List[int]:
+    """Powers of two that evenly chunk every redistribution of ``spec``.
+
+    For each redistribution the chunk dim is the one ``redistribute`` will
+    pick; ``n_chunks`` must divide its local size at that stage.  Returns at
+    least ``[1]`` (the bulk path is always feasible).
+    """
+    offset = len(spec.batch_spec)
+    ndim_total = offset + len(spec.eff_grid)
+    stages, redists = spec.stage_order()
+    sizes = []
+    for i, redist in enumerate(redists):
+        try:
+            d = free_chunk_dim(redist, ndim_total, offset)
+        except ValueError:
+            return [1]  # no free dim anywhere: bulk only
+        if d < offset:
+            if d >= len(batch_shape):
+                return [1]  # batch extent unknown: don't guess
+            sizes.append(batch_shape[d])
+        else:
+            block = local_shape(stages[i], spec.eff_grid, axis_sizes)
+            sizes.append(block[d - offset])
+    counts = [1]
+    n = 2
+    cap = min(sizes) if sizes else 1
+    if max_chunks is not None:
+        cap = min(cap, max_chunks)
+    while n <= cap and all(s % n == 0 for s in sizes):
+        counts.append(n)
+        n *= 2
+    return counts
+
+
+def enumerate_candidates(grid: Tuple[int, ...], mesh: Mesh,
+                         kinds: Tuple[str, ...], *, inverse: bool = False,
+                         n_batch: int = 0,
+                         batch_shape: Tuple[int, ...] = (),
+                         backends: Sequence[str] = BACKENDS,
+                         max_chunks: Optional[int] = None) -> List[Candidate]:
+    """All valid plans for this (grid, mesh, kinds) problem.
+
+    Mesh-axis *orderings* are part of the space: on a (2, 4) mesh, pencil
+    over ("data", "model") and ("model", "data") shard different dims with
+    different fan-outs, and on imbalanced grids only some orderings divide
+    the grid at every stage (``validate_grid`` filters those out).
+    """
+    ndim = len(grid)
+    names = tuple(mesh.axis_names)
+    axis_sizes = dict(zip(names, mesh.devices.shape))
+    # 2-D pencil and 2-D slab are the same two-stage structure; keep one.
+    decomp_arity = [("pencil", ndim - 1)]
+    if ndim > 2:
+        decomp_arity.append(("slab", 1))
+    out: List[Candidate] = []
+    for decomp_kind, arity in decomp_arity:
+        for axes in itertools.permutations(names, arity):
+            try:
+                spec = _spec_for(mesh, grid, decomp_kind, axes, kinds,
+                                 "xla", 1, inverse, n_batch)
+                validate_grid(spec.decomp, spec.eff_grid, axis_sizes)
+            except (ValueError, KeyError):
+                continue
+            chunk_counts = feasible_chunk_counts(
+                spec, axis_sizes, batch_shape, max_chunks)
+            for n_chunks in chunk_counts:
+                for backend in backends:
+                    out.append(Candidate(decomp=decomp_kind, mesh_axes=axes,
+                                         backend=backend, n_chunks=n_chunks))
+    return out
+
+
+def rank_candidates(cands: Sequence[Candidate], grid: Tuple[int, ...],
+                    mesh: Mesh, machine: Machine,
+                    dtype_bytes: int = 8) -> List[Tuple[float, Candidate]]:
+    """(predicted seconds, candidate), cheapest first — the pruning pass."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ranked = []
+    for cand in cands:
+        dec = make_decomposition(cand.decomp, cand.mesh_axes, len(grid))
+        pred = predict_plan_time(grid, dec, axis_sizes, machine,
+                                 backend=cand.backend,
+                                 n_chunks=cand.n_chunks,
+                                 dtype_bytes=dtype_bytes)
+        ranked.append((pred["t_total_s"], cand))
+    ranked.sort(key=lambda t: t[0])
+    return ranked
+
+
+def measure_candidate(cand: Candidate, grid: Tuple[int, ...], mesh: Mesh,
+                      kinds: Tuple[str, ...], dtype, *,
+                      inverse: bool = False,
+                      batch_shape: Tuple[int, ...] = (),
+                      repeats: int = 3) -> float:
+    """Wall time of the candidate's compiled executable (best of repeats).
+
+    Compilation goes through ``compile_pipeline``'s plan cache, so measuring
+    doubles as warming: the winner's executable is already resident when the
+    user calls ``fftnd`` afterwards.
+    """
+    spec = _spec_for(mesh, grid, cand.decomp, cand.mesh_axes, kinds,
+                     cand.backend, cand.n_chunks, inverse, len(batch_shape))
+    exe = compile_pipeline(mesh, spec, batch_shape=batch_shape, dtype=dtype)
+    arg = input_struct(mesh, spec, batch_shape, dtype)
+    rng = np.random.default_rng(0)
+    host = rng.standard_normal(arg.shape, dtype=np.float32)
+    x = jax.device_put(jnp.asarray(host, dtype=arg.dtype), arg.sharding)
+    jax.block_until_ready(exe(x))  # warm-up (plus any lazy init)
+    best = float("inf")
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(exe(x))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _default_candidate(cands: Sequence[Candidate]) -> Optional[Candidate]:
+    """The plan the static API would have used (baseline to never regress)."""
+    for cand in cands:
+        if cand.backend == "xla" and cand.n_chunks == 1 \
+                and cand.decomp == "pencil":
+            return cand
+    return cands[0] if cands else None
+
+
+def tune(grid: Sequence[int], mesh: Mesh, *,
+         kinds: Optional[Sequence[str]] = None, dtype=jnp.complex64,
+         inverse: bool = False, batch_shape: Sequence[int] = (),
+         mode: str = "auto", cache: Optional[TuningCache] = None,
+         machine: Optional[Machine] = None, top_k: int = 3,
+         backends: Sequence[str] = BACKENDS,
+         max_chunks: Optional[int] = None, repeats: int = 3) -> TunedPlan:
+    """Pick the best plan for one problem key; see the module docstring.
+
+    ``mode="auto"``       enumerate -> prune -> measure top_k -> persist.
+    ``mode="heuristic"``  model-only argmin; no timing, no disk.
+
+    The returned :class:`TunedPlan` carries the winning (decomp, mesh_axes,
+    backend, n_chunks) plus its predicted and (for auto) measured times.
+    """
+    grid = tuple(grid)
+    batch_shape = tuple(batch_shape)
+    kinds = tuple(kinds) if kinds is not None else ("fft",) * len(grid)
+    if mode not in ("auto", "heuristic"):
+        raise ValueError(f"tune mode must be auto|heuristic, got {mode!r}")
+
+    key = tuning_key(grid=grid, mesh_shape=tuple(mesh.devices.shape),
+                     mesh_axes=tuple(mesh.axis_names), kinds=kinds,
+                     dtype=str(jnp.dtype(dtype)), inverse=inverse,
+                     batch_shape=batch_shape,
+                     platform=jax.default_backend())
+    if mode == "auto":
+        if cache is None:
+            cache = global_tuning_cache()
+        hit = cache.get(key)
+        # A cached plan must also satisfy THIS call's search restrictions
+        # (an earlier unrestricted run may have persisted e.g. a matmul
+        # winner that a backends=("xla",) caller cannot use) — retune if not.
+        if hit is not None and hit.backend in backends and (
+                max_chunks is None or hit.n_chunks <= max_chunks):
+            return hit
+
+    cands = enumerate_candidates(grid, mesh, kinds, inverse=inverse,
+                                 n_batch=len(batch_shape),
+                                 batch_shape=batch_shape, backends=backends,
+                                 max_chunks=max_chunks)
+    if not cands:
+        raise ValueError(
+            f"no valid plan for grid {grid} on mesh "
+            f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    machine = machine or default_machine()
+    dtype_bytes = jnp.dtype(dtype).itemsize
+    ranked = rank_candidates(cands, grid, mesh, machine, dtype_bytes)
+
+    if mode == "heuristic":
+        pred, best = ranked[0]
+        return TunedPlan(decomp=best.decomp, mesh_axes=best.mesh_axes,
+                         backend=best.backend, n_chunks=best.n_chunks,
+                         predicted_s=pred, measured_s=0.0,
+                         source="heuristic")
+
+    survivors = [c for _, c in ranked[:max(top_k, 1)]]
+    baseline = _default_candidate(cands)
+    if baseline is not None and baseline not in survivors:
+        survivors.append(baseline)
+    predicted = {c: p for p, c in ranked}
+    best_cand, best_time, baseline_time = None, float("inf"), 0.0
+    for cand in survivors:
+        t = measure_candidate(cand, grid, mesh, kinds, dtype,
+                              inverse=inverse, batch_shape=batch_shape,
+                              repeats=repeats)
+        if cand == baseline:
+            baseline_time = t
+        if t < best_time:
+            best_cand, best_time = cand, t
+    plan = TunedPlan(decomp=best_cand.decomp, mesh_axes=best_cand.mesh_axes,
+                     backend=best_cand.backend, n_chunks=best_cand.n_chunks,
+                     predicted_s=predicted.get(best_cand, 0.0),
+                     measured_s=best_time, source="measured",
+                     baseline_s=baseline_time)
+    cache.put(key, plan)
+    return plan

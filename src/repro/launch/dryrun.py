@@ -21,6 +21,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro.compat import cost_analysis_dict
 from repro.configs import ARCHS, CANONICAL, applicable_shapes, get_config
 from repro.distributed.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS,
                                         RooflineTerms, estimate_hbm_bytes,
@@ -61,7 +62,7 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
         t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     collectives, per_kind = parse_hlo_collectives(hlo, n_dev)
     coll_operand = sum(c.operand_bytes for c in collectives)
@@ -171,7 +172,7 @@ def dryrun_fft(grid, decomp, *, multi_pod: bool, n_chunks: int = 1,
         compiled = lowered.compile()
     t_compile = time.perf_counter() - t0
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     collectives, per_kind = parse_hlo_collectives(hlo, n_dev)
 

@@ -1,0 +1,110 @@
+"""Minimal, dependency-free stand-in for the slice of hypothesis we use.
+
+When ``hypothesis`` is installed the test modules import it directly; this
+shim only exists so the property tests still collect and run in containers
+without it.  It is deliberately tiny:
+
+* strategies draw from a **fixed-seed** RNG, so every run sees the same
+  example sequence (reproducible, no shrinking, no database);
+* ``@given(**strategies)`` turns the test into a loop over ``max_examples``
+  drawn keyword-argument dicts (``settings`` supplies the count);
+* only the strategy combinators the suite uses are provided
+  (``integers``, ``booleans``, ``sampled_from``, ``tuples``).
+
+Usage in a test module::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _propcheck import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable, Sequence
+
+_DEFAULT_MAX_EXAMPLES = 20
+_SEED = 0xDA66E2  # fixed: the whole point is deterministic example streams
+
+
+class Strategy:
+    """A draw rule: ``draw(rng)`` produces one example."""
+
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (the used subset)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> Strategy:
+        return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    @staticmethod
+    def sampled_from(elements: Sequence[Any]) -> Strategy:
+        elements = list(elements)
+        return Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+    @staticmethod
+    def tuples(*parts: Strategy) -> Strategy:
+        return Strategy(lambda rng: tuple(p.draw(rng) for p in parts))
+
+
+st = strategies
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Records ``max_examples`` on the test for ``given`` to pick up.
+
+    Extra hypothesis knobs (``deadline=None`` etc.) are accepted and ignored.
+    """
+
+    def deco(fn):
+        fn._propcheck_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs: Strategy):
+    """Run the test once per drawn example, hypothesis-style.
+
+    Works in either decorator order relative to ``settings`` because the
+    example count is read at call time from the wrapped function.
+    """
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_propcheck_max_examples",
+                        getattr(fn, "_propcheck_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(_SEED)
+            for i in range(n):
+                drawn = {k: s.draw(rng) for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:  # re-raise with the failing example
+                    raise AssertionError(
+                        f"propcheck example {i + 1}/{n} failed with "
+                        f"arguments {drawn!r}: {e}") from e
+
+        # Hide the drawn parameters from pytest's fixture resolution: only
+        # non-strategy parameters (real fixtures) remain in the signature.
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items()
+                  if name not in strategy_kwargs]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        return wrapper
+
+    return deco

@@ -12,9 +12,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 @pytest.fixture(scope="session")
 def cpu_mesh():
-    from jax.sharding import AxisType
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    # jax 0.4.x has neither jax.sharding.AxisType nor the axis_types kwarg;
+    # repro.compat.make_mesh papers over both.
+    from repro.compat import AxisType, make_mesh
+    return make_mesh((1, 1), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
 
 
 @pytest.fixture(scope="session")

@@ -3,7 +3,10 @@ executed with interpret=True (no TPU in this container)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic container: fixed-seed shim
+    from _propcheck import given, settings, strategies as st
 
 from repro.kernels.fft_matmul import fft1d_planes
 from repro.kernels.ops import fft1d, ifft1d

@@ -42,8 +42,9 @@ def test_transpose_bytes_match_hlo():
     """Analytic per-rank transpose volume == HLO all-to-all operand bytes."""
     out = run_subprocess("""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+from jax.sharding import NamedSharding
+from repro.compat import AxisType, make_mesh
+mesh = make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
 from repro.core import make_decomposition, make_spec, build_pipeline
 from repro.distributed.roofline import parse_hlo_collectives
 dec = make_decomposition("pencil", ("data", "model"))

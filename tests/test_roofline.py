@@ -31,8 +31,9 @@ def test_parse_collectives_with_trip_counts():
     the while trip count."""
     out = run_subprocess("""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType, PartitionSpec as P, NamedSharding
-mesh = jax.make_mesh((4,), ("model",), axis_types=(AxisType.Auto,))
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.compat import AxisType, make_mesh
+mesh = make_mesh((4,), ("model",), axis_types=(AxisType.Auto,))
 from repro.distributed.roofline import parse_hlo_collectives
 
 def f(x, w):
@@ -81,8 +82,8 @@ def test_analytic_flops_cross_check():
     UNROLLED dense model (scan disabled by n_layers == pattern unit)."""
     out = run_subprocess("""
 import dataclasses, jax, jax.numpy as jnp
-from jax.sharding import AxisType
-mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+from repro.compat import AxisType, make_mesh
+mesh = make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,)*2)
 from repro.configs import smoke_config
 from repro.distributed.sharding import MeshRules
 from repro.models import transformer as tfm
@@ -101,7 +102,10 @@ with mesh:
                                    mode="train", remat=False)
         return logits
     co = jax.jit(fwd).lower(params, jax.ShapeDtypeStruct((2, 64), jnp.int32)).compile()
-hlo_flops = co.cost_analysis()["flops"]
+# jax 0.4.x returns a one-element list of properties dicts; newer jax
+# returns the dict directly — compat normalizes.
+from repro.compat import cost_analysis_dict
+hlo_flops = cost_analysis_dict(co)["flops"]
 pred = step_flops(cfg, shape, remat=False)["forward"]
 print("ratio", pred / hlo_flops)
 """, devices=1)

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic container: fixed-seed shim
+    from _propcheck import given, settings, strategies as st
 
 from repro.core.transforms import ALL_KINDS, apply_1d, factorize, \
     fourstep_fft_planes
