@@ -1,4 +1,5 @@
-"""Autotuner benchmark: static default vs tuned plan, per shape.
+"""Autotuner benchmark: static default vs tuned plan, per shape — plus a
+calibrated-vs-default cost-model comparison.
 
 For each (grid, mesh) problem the tuner enumerates the full plan space,
 prunes with the LogP/roofline model and measures the top-k survivors; this
@@ -7,19 +8,53 @@ winner, and which plan won — the repo's analogue of the paper's "dynamic
 scheduling beats static tuning" claim, executable on whatever devices the
 process sees (run under XLA_FLAGS=--xla_force_host_platform_device_count=8
 for the multi-device picture).
+
+The second block quantifies what calibration buys: for each shape it ranks
+the candidates twice — once with the hard-coded model-default constants and
+once with the profile ``perfmodel.calibrate()`` measured on this very
+process — measures the union of both models' top-3 survivors, and reports
+per-model prediction/measurement rank agreement (pairwise concordance over
+the measured subset, and whether the model's argmin was the measured
+argmin).
 """
 from __future__ import annotations
+
+from itertools import combinations
 
 import jax
 
 from benchmarks.common import emit
 
 SHAPES = ((8, 8, 16), (16, 16, 32), (32, 32, 32))
+KINDS3 = ("fft", "fft", "fft")
+
+
+def _rank_agreement(ranked, measured):
+    """(concordant-pair fraction, argmin-hit) of a predicted ranking vs
+    measured times, over the measured candidate subset."""
+    pred = {c: p for p, c in ranked if c in measured}
+    cands = list(pred)
+    pairs = list(combinations(cands, 2))
+    if not pairs:
+        return 1.0, 1
+    conc = 0.0
+    for a, b in pairs:
+        s = (pred[a] - pred[b]) * (measured[a] - measured[b])
+        # A tied prediction carries no ordering information: score it 0.5
+        # so a degenerate everything-ties model cannot claim 100%.
+        conc += 1.0 if s > 0 else (0.5 if s == 0 else 0.0)
+    best_pred = min(cands, key=lambda c: pred[c])
+    best_meas = min(measured, key=measured.get)
+    return conc / len(pairs), int(best_pred == best_meas)
 
 
 def run() -> None:
     from repro.compat import make_mesh
     from repro.core import TuningCache, tune
+    from repro.core.perfmodel import profile_from_machine
+    from repro.core.tuner import (default_machine, enumerate_candidates,
+                                  measure_candidate, rank_candidates,
+                                  resolve_profile)
 
     n_dev = len(jax.devices())
     if n_dev >= 8:
@@ -27,6 +62,9 @@ def run() -> None:
     else:
         mesh = make_mesh((1, n_dev), ("data", "model"))
     cache = TuningCache(path=None)  # in-memory: benchmark, not wisdom
+
+    # Block 1: static default vs tuned winner (tune() resolves the
+    # calibrated profile itself and stores it in the in-memory cache).
     for grid in SHAPES:
         plan = tune(grid, mesh, cache=cache, top_k=3)
         label = "x".join(map(str, grid))
@@ -34,6 +72,33 @@ def run() -> None:
                f"/chunks={plan.n_chunks}")
         emit(f"tuner_default_{label}", plan.baseline_s * 1e6)
         emit(f"tuner_winner_{label}", plan.measured_s * 1e6, won)
+
+    # Block 2: does calibration improve the pruning model's ranking?
+    # Block 1's tune() calls already calibrated and stored the profile in
+    # `cache`; resolve it rather than re-running the microbenchmarks.
+    default_prof = profile_from_machine(default_machine())
+    calib_prof = resolve_profile(cache, mesh=mesh)
+    if not calib_prof.calibrated:
+        # REPRO_CALIBRATE=off (or calibration unavailable): the
+        # "calibrated" rows would silently duplicate the default ones.
+        emit("tuner_rankagree_skipped", 0.0, "no calibrated profile")
+        return
+    for grid in SHAPES:
+        label = "x".join(map(str, grid))
+        cands = enumerate_candidates(grid, mesh, KINDS3)
+        rk_def = rank_candidates(cands, grid, mesh, default_prof,
+                                 kinds=KINDS3)
+        rk_cal = rank_candidates(cands, grid, mesh, calib_prof,
+                                 kinds=KINDS3)
+        probe = {c for _, c in rk_def[:3]} | {c for _, c in rk_cal[:3]}
+        measured = {
+            c: measure_candidate(c, grid, mesh, KINDS3, jax.numpy.complex64)
+            for c in probe
+        }
+        for name, ranked in (("default", rk_def), ("calibrated", rk_cal)):
+            conc, hit = _rank_agreement(ranked, measured)
+            emit(f"tuner_rankagree_{name}_{label}", conc * 100.0,
+                 f"argmin_hit={hit}")
 
 
 if __name__ == "__main__":

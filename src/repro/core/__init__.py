@@ -7,13 +7,15 @@ from .api import (fft2d, fft3d, fftnd, ifft2d, ifft3d, ifftnd,
 from .decomp import (Decomposition, Redistribution, StageLayout,
                      local_shape, make_decomposition, pencil, pencil_nd,
                      slab, slab_nd, validate_grid)
+from .perfmodel import (Machine, MachineProfile, calibrate,
+                        predict_plan_time, profile_from_machine)
 from .pipeline import (PipelineSpec, build_pipeline, compile_pipeline,
-                       input_struct, make_spec)
+                       effective_grid, input_struct, make_spec)
 from .plan import (GLOBAL_PLAN_CACHE, PlanCache, TunedPlan, TuningCache,
                    global_tuning_cache, plan_key, tuning_key)
 from .redistribute import redistribute, transpose_cost_bytes
 from .tuner import (Candidate, enumerate_candidates, measure_candidate,
-                    rank_candidates, tune)
+                    rank_candidates, resolve_profile, synth_input, tune)
 from . import transforms
 
 __all__ = [
@@ -22,11 +24,13 @@ __all__ = [
     "Decomposition", "Redistribution", "StageLayout", "local_shape",
     "make_decomposition", "pencil", "pencil_nd", "slab", "slab_nd",
     "validate_grid",
-    "PipelineSpec", "build_pipeline", "compile_pipeline", "input_struct",
-    "make_spec",
+    "PipelineSpec", "build_pipeline", "compile_pipeline", "effective_grid",
+    "input_struct", "make_spec",
     "GLOBAL_PLAN_CACHE", "PlanCache", "plan_key",
     "TunedPlan", "TuningCache", "global_tuning_cache", "tuning_key",
+    "Machine", "MachineProfile", "calibrate", "predict_plan_time",
+    "profile_from_machine",
     "Candidate", "enumerate_candidates", "measure_candidate",
-    "rank_candidates", "tune",
+    "rank_candidates", "resolve_profile", "synth_input", "tune",
     "redistribute", "transpose_cost_bytes", "transforms",
 ]

@@ -19,6 +19,19 @@ chunk count.  Plans (compiled executables) are cached transparently.
   ``TuningCache`` (``~/.cache/repro-fft/tuning.json`` or
   ``$REPRO_TUNING_CACHE``), so later processes skip the search entirely.
 
+**Calibration** (what makes the model trustworthy on *your* hardware): the
+perf model's machine constants are measured, not assumed.  The first
+``tuning="auto"`` call on a machine runs ``perfmodel.calibrate()`` — local
+FFT throughput per backend and per kind family, memory bandwidth, and
+per-mesh-axis ``all_to_all`` alpha/beta — and stores the resulting
+``MachineProfile`` in the wisdom file's ``"machine"`` section, keyed by
+platform; every later process (and every ``tuning="heuristic"`` call)
+loads it from there for free.  On a single device the network terms fall
+back to model defaults (``net_calibrated=False``).  Set
+``REPRO_CALIBRATE=off`` to skip calibration and prune with the built-in
+constants.  The model is kind-aware either way: R2C/R2R pipelines are
+priced on their actual stage costs and padded transpose volumes.
+
 Example (complex-to-complex, pencil decomposition):
 
     mesh = make_mesh((2, 2), ("data", "model"))
@@ -218,17 +231,25 @@ def poisson_solve(rhs: jax.Array, *, mesh: Mesh,
                   topology: Tuple[str, str, str] = ("periodic",) * 3,
                   lengths: Tuple[float, ...] = (2 * np.pi,) * 3,
                   decomp: str = "pencil", backend: str = "xla",
-                  n_chunks: int = 1, tuning: str = "off") -> jax.Array:
+                  n_chunks: int = 1,
+                  mesh_axes: Optional[Sequence[str]] = None,
+                  tuning: str = "off",
+                  tune_cache: Optional[TuningCache] = None) -> jax.Array:
     """Solve lap(phi) = rhs spectrally on a (Periodic|Bounded)^3 box.
 
     Periodic dims use C2C FFTs; Bounded dims use DCT-II (homogeneous Neumann),
     matching the Oceananigans pressure-solver topologies in paper Fig. 8.
+    Leading dims of ``rhs`` beyond the trailing 3 are batch dims; the null
+    (mean) mode is zeroed per batch element.  ``mesh_axes`` and
+    ``tune_cache`` are forwarded to the underlying transforms, so tuned
+    solves share wisdom with (and warm plans for) direct ``fft3d`` callers.
     """
     grid = rhs.shape[-3:]
     kinds = tuple("fft" if t == "periodic" else "dct2" for t in topology)
     xk = fft3d(rhs.astype(jnp.complex64) if "fft" in kinds else rhs,
                mesh=mesh, decomp=decomp, kinds=kinds, backend=backend,
-               n_chunks=n_chunks, tuning=tuning)
+               n_chunks=n_chunks, mesh_axes=mesh_axes, tuning=tuning,
+               tune_cache=tune_cache)
     lams = [
         poisson_eigenvalues(n, l, t)
         for n, l, t in zip(grid, lengths, topology)
@@ -239,11 +260,14 @@ def poisson_solve(rhs: jax.Array, *, mesh: Mesh,
     lam_flat[0] = 1.0  # pin the null mode (mean) to zero
     lam = lam_flat.reshape(lam.shape)
     scaled = xk / jnp.asarray(lam, dtype=xk.dtype)
-    # zero the null (mean) mode explicitly
+    # Zero the null (mean) mode explicitly — indexing only the trailing 3
+    # spectral dims so every leading batch element is zeroed, not just
+    # batch index 0.
     zero = jnp.zeros((), scaled.dtype)
-    scaled = scaled.at[(0,) * scaled.ndim].set(zero)
+    scaled = scaled.at[..., 0, 0, 0].set(zero)
     phi = ifft3d(scaled, mesh=mesh, grid=grid, decomp=decomp, kinds=kinds,
-                 backend=backend, n_chunks=n_chunks, tuning=tuning)
+                 backend=backend, n_chunks=n_chunks, mesh_axes=mesh_axes,
+                 tuning=tuning, tune_cache=tune_cache)
     if not jnp.iscomplexobj(rhs):
         phi = jnp.real(phi)
     return phi

@@ -83,14 +83,30 @@ def _freq_pad_target(decomp: Decomposition, axis_sizes: dict, nfreq: int) -> int
     return ((nfreq + divisor - 1) // divisor) * divisor
 
 
+def effective_grid(grid: Tuple[int, ...], decomp: Decomposition,
+                   axis_sizes: dict,
+                   kinds: Tuple[str, ...]) -> Tuple[int, ...]:
+    """The grid the pipeline actually moves: R2C pads the frequency dim.
+
+    For an ``rfft`` first kind, dim 0 becomes ``n//2 + 1`` rounded up to the
+    LCM of every mesh-axis size that shards it downstream — a function of
+    the *decomposition*, so two candidate plans for the same logical grid
+    can transpose different volumes.  The tuner's kind-aware cost model
+    (``perfmodel.predict_plan_time(kinds=..., eff_grid=...)``) prices
+    candidates on this grid, not the logical one.
+    """
+    eff = list(grid)
+    if kinds[0] == "rfft":
+        eff[0] = _freq_pad_target(decomp, axis_sizes, grid[0] // 2 + 1)
+    return tuple(eff)
+
+
 def make_spec(mesh: Mesh, grid: Tuple[int, ...], decomp: Decomposition,
               kinds: Tuple[str, ...], *, backend: str = "xla",
               n_chunks: int = 1, inverse: bool = False,
               batch_spec: Tuple[Optional[str], ...] = ()) -> PipelineSpec:
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    eff = list(grid)
-    if kinds[0] == "rfft":
-        eff[0] = _freq_pad_target(decomp, axis_sizes, grid[0] // 2 + 1)
+    eff = effective_grid(tuple(grid), decomp, axis_sizes, tuple(kinds))
     return PipelineSpec(grid=tuple(grid), eff_grid=tuple(eff), decomp=decomp,
                         kinds=tuple(kinds), backend=backend,
                         n_chunks=n_chunks, inverse=inverse,

@@ -24,6 +24,11 @@ import threading
 import time
 from typing import Any, Callable, Dict, Hashable, Optional, Sequence, Tuple
 
+try:  # POSIX advisory file locking for cross-process cache merging
+    import fcntl
+except ImportError:  # non-POSIX: single-writer semantics, merge still runs
+    fcntl = None
+
 
 @dataclasses.dataclass
 class PlanEntry:
@@ -100,6 +105,7 @@ class TunedPlan:
     measured_s: float            # compiled-executable timing (0.0 if none)
     source: str                  # "measured" | "heuristic" | "default"
     baseline_s: float = 0.0      # static default's time in the same run
+    ts: float = 0.0              # epoch seconds when measured (merge tiebreak)
 
     def to_json(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -113,7 +119,8 @@ class TunedPlan:
                    predicted_s=float(d.get("predicted_s", 0.0)),
                    measured_s=float(d.get("measured_s", 0.0)),
                    source=d.get("source", "measured"),
-                   baseline_s=float(d.get("baseline_s", 0.0)))
+                   baseline_s=float(d.get("baseline_s", 0.0)),
+                   ts=float(d.get("ts", 0.0)))
 
 
 def tuning_key(*, grid: Sequence[int], mesh_shape: Sequence[int],
@@ -152,7 +159,16 @@ class TuningCache:
 
     ``path=None`` keeps the cache in-memory only (tests, throwaway runs).
     Writes go through an atomic rename so a crashed process never leaves a
-    torn JSON file behind.
+    torn JSON file behind, and every save **re-reads and merges** the file
+    under an ``fcntl`` advisory lock first: two processes tuning different
+    problems against the same wisdom file both keep their plans (per key,
+    the entry with the newest ``ts`` wins), instead of the last writer
+    erasing the other's work.
+
+    Besides plans, the file carries a ``"machine"`` section — the
+    calibrated :class:`~repro.core.perfmodel.MachineProfile` per platform
+    (as raw JSON, see ``get_machine``/``put_machine``) — so calibration
+    runs once per machine, not once per process.
     """
 
     _VERSION = 1
@@ -161,37 +177,93 @@ class TuningCache:
         self.path = path
         self._lock = threading.Lock()
         self._plans: Dict[str, TunedPlan] = {}
+        self._machines: Dict[str, Dict[str, Any]] = {}
         self.hits = 0
         self.misses = 0
         if path is not None:
             self._load()
 
-    def _load(self) -> None:
+    def _read_file(self) -> Optional[Dict[str, Any]]:
         try:
             with open(self.path) as f:
                 raw = json.load(f)
         except (FileNotFoundError, json.JSONDecodeError):
-            return
+            return None
         if raw.get("version") != self._VERSION:
-            return  # stale schema: retune rather than misread
+            return None  # stale schema: retune rather than misread
+        return raw
+
+    def _load(self) -> None:
+        raw = self._read_file()
+        if raw is None:
+            return
         for k, v in raw.get("plans", {}).items():
             try:
                 self._plans[k] = TunedPlan.from_json(v)
             except (KeyError, TypeError, ValueError):
                 continue
+        for plat, prof in raw.get("machine", {}).items():
+            if isinstance(prof, dict):
+                self._machines[plat] = prof
 
-    def _save(self) -> None:
+    def _merge_from_disk(self) -> None:
+        """Fold the file's current contents into memory (newest ts wins)."""
+        raw = self._read_file()
+        if raw is None:
+            return
+        for k, v in raw.get("plans", {}).items():
+            try:
+                other = TunedPlan.from_json(v)
+            except (KeyError, TypeError, ValueError):
+                continue
+            mine = self._plans.get(k)
+            if mine is None or other.ts > mine.ts:
+                self._plans[k] = other
+        for plat, prof in raw.get("machine", {}).items():
+            if not isinstance(prof, dict):
+                continue
+            mine = self._machines.get(plat)
+            # Newest save wins (same rule as plans): a process holding a
+            # stale profile must not clobber a fresher calibration — e.g.
+            # one upgraded with network measurements — on an unrelated
+            # plan save.
+            if mine is None or (prof.get("_saved_ts", 0.0)
+                                > mine.get("_saved_ts", 0.0)):
+                self._machines[plat] = prof
+
+    def _save(self, merge: bool = True) -> None:
+        # Caller holds self._lock.  merge=False wipes the file (clear()).
         if self.path is None:
             return
         os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
-        payload = {
-            "version": self._VERSION,
-            "plans": {k: p.to_json() for k, p in self._plans.items()},
-        }
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(payload, f, indent=1, sort_keys=True)
-        os.replace(tmp, self.path)
+        lock_file = None
+        try:
+            if fcntl is not None:
+                try:
+                    lock_file = open(self.path + ".lock", "w")
+                    fcntl.flock(lock_file, fcntl.LOCK_EX)
+                except OSError:
+                    # Filesystem without advisory-lock support (e.g. some
+                    # NFS mounts): degrade to the best-effort lockless
+                    # merge + atomic rename rather than failing the save.
+                    if lock_file is not None:
+                        lock_file.close()
+                    lock_file = None
+            if merge:
+                self._merge_from_disk()
+            payload = {
+                "version": self._VERSION,
+                "plans": {k: p.to_json() for k, p in self._plans.items()},
+                "machine": self._machines,
+            }
+            tmp = f"{self.path}.tmp.{os.getpid()}"
+            with open(tmp, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        finally:
+            if lock_file is not None:
+                fcntl.flock(lock_file, fcntl.LOCK_UN)
+                lock_file.close()
 
     def get(self, key: str) -> Optional[TunedPlan]:
         with self._lock:
@@ -204,7 +276,35 @@ class TuningCache:
 
     def put(self, key: str, plan: TunedPlan) -> None:
         with self._lock:
+            if plan.ts == 0.0:
+                # An unstamped plan would lose every recency merge against
+                # an existing on-disk entry, making this put a silent no-op;
+                # writing it now means it is current now.
+                plan = dataclasses.replace(plan, ts=time.time())
             self._plans[key] = plan
+            self._save()
+
+    def get_machine(self, platform: str) -> Optional[Dict[str, Any]]:
+        """Raw calibrated-profile JSON for ``platform`` (or None).
+
+        Decoding to a ``MachineProfile`` is the caller's job
+        (``perfmodel.MachineProfile.from_json``) — this module stays free of
+        model dependencies.
+        """
+        with self._lock:
+            prof = self._machines.get(platform)
+            return dict(prof) if prof is not None else None
+
+    def put_machine(self, platform: str, profile: Dict[str, Any]) -> None:
+        """Persist one platform's calibrated profile JSON.
+
+        The record is stamped with a ``_saved_ts`` save time so concurrent
+        processes merge on recency; profile decoders ignore the extra key.
+        """
+        with self._lock:
+            rec = dict(profile)
+            rec.setdefault("_saved_ts", time.time())
+            self._machines[platform] = rec
             self._save()
 
     def __len__(self) -> int:
@@ -214,14 +314,16 @@ class TuningCache:
     def stats(self) -> Dict[str, Any]:
         with self._lock:
             return {"plans": len(self._plans), "hits": self.hits,
-                    "misses": self.misses, "path": self.path}
+                    "misses": self.misses, "path": self.path,
+                    "machines": len(self._machines)}
 
     def clear(self) -> None:
         with self._lock:
             self._plans.clear()
+            self._machines.clear()
             self.hits = 0
             self.misses = 0
-            self._save()
+            self._save(merge=False)
 
 
 # Lazily-created process-global tuning cache (persisted under

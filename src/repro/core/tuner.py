@@ -19,12 +19,30 @@ runtime should choose.  ``tune()`` closes that loop for one problem key
 
 ``fft3d``/``fftnd`` consult this transparently via ``tuning="auto"``
 (enumerate+measure, persistent) or ``tuning="heuristic"`` (model-only
-argmin, no timing, no disk).
+argmin, no timing, no disk writes — it may *read* a previously stored
+calibration profile).
+
+**Calibration.**  The pruning model's machine constants are not hard-coded:
+with ``machine=None`` (the default), ``tune()`` resolves a
+:class:`~repro.core.perfmodel.MachineProfile` for the current platform —
+loaded from the wisdom file's ``"machine"`` section when one was saved
+before, and otherwise (in ``mode="auto"`` only) measured on the spot by
+``perfmodel.calibrate()`` and persisted for every later process.
+``mode="heuristic"`` keeps its zero-overhead contract: it uses a stored
+profile when one is available but never runs the calibration
+microbenchmarks itself.  Set ``REPRO_CALIBRATE=off`` to skip calibration
+entirely and prune with the model-default constants.
+
+The model itself is kind-aware: candidates are priced with the pipeline's
+per-dim transform kinds and the R2C-padded effective grid
+(``pipeline.effective_grid``), so R2C/R2R plans rank on their real costs
+rather than as if they were C2C on the logical grid.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import os
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -34,8 +52,11 @@ import numpy as np
 from jax.sharding import Mesh
 
 from .decomp import local_shape, make_decomposition, validate_grid
-from .perfmodel import CPU_CORE, TPU_V5E, Machine, predict_plan_time
-from .pipeline import PipelineSpec, compile_pipeline, input_struct, make_spec
+from .perfmodel import (CPU_CORE, TPU_V5E, Machine, MachineProfile,
+                        _calibrate_network, _time_best, calibrate,
+                        predict_plan_time, profile_from_machine)
+from .pipeline import (PipelineSpec, compile_pipeline, effective_grid,
+                       input_struct, make_spec)
 from .plan import (TunedPlan, TuningCache, global_tuning_cache, tuning_key)
 from .redistribute import free_chunk_dim
 
@@ -59,6 +80,80 @@ class Candidate:
 def default_machine() -> Machine:
     """Machine constants for the pruning model, matched to the runtime."""
     return TPU_V5E if jax.default_backend() == "tpu" else CPU_CORE
+
+
+# (platform, mesh-axis name) pairs whose all_to_all terms this process
+# already tried to measure — bounds recalibration to once per process per
+# axis when the network terms remain unmeasurable (e.g. timings too noisy
+# to split alpha from beta), without blocking later meshes whose axis
+# names were never attempted.
+_NET_UPGRADE_ATTEMPTED: set = set()
+
+
+def resolve_profile(cache: Optional[TuningCache] = None, *, mesh=None,
+                    allow_calibrate: bool = True,
+                    **calibrate_kw) -> MachineProfile:
+    """The calibrated :class:`MachineProfile` for this platform.
+
+    Resolution order: ``REPRO_CALIBRATE=off`` -> model defaults
+    (``calibrated=False``); a profile stored in ``cache``'s ``"machine"``
+    section -> load it; otherwise calibrate (when ``allow_calibrate``),
+    persisting the result back into ``cache`` so later processes skip the
+    microbenchmarks.  A stored profile whose network terms were never
+    measured (``net_calibrated=False`` — it was calibrated in a 1-device
+    process) is *upgraded* when this process can do better: with a
+    multi-device ``mesh`` and ``allow_calibrate``, calibration re-runs with
+    the all_to_all benchmarks and the richer profile replaces the stored
+    one.  ``calibrate_kw`` is forwarded to ``perfmodel.calibrate`` (tests
+    inject a fake ``timer``).
+    """
+    platform = jax.default_backend()
+    env = os.environ.get("REPRO_CALIBRATE", "auto").strip().lower()
+    if env == "off":
+        return profile_from_machine(default_machine(), platform=platform)
+    multidev_axes = (
+        {name for name, size in zip(mesh.axis_names, mesh.devices.shape)
+         if size > 1} if mesh is not None else set())
+    stored = None
+    if cache is not None:
+        raw = cache.get_machine(platform)
+        if raw is not None:
+            try:
+                stored = MachineProfile.from_json(raw)
+            except (KeyError, TypeError, ValueError):
+                stored = None  # unreadable profile: recalibrate below
+            if stored is not None:
+                # Network terms are per mesh-axis *name*: a stored profile
+                # (even a net_calibrated one) may not cover this mesh's
+                # axes, so upgrade whenever a measurable axis is uncovered
+                # and not already attempted by this process.
+                uncovered = multidev_axes - set(dict(stored.net_alpha_s))
+                pending = {ax for ax in uncovered
+                           if (platform, ax) not in _NET_UPGRADE_ATTEMPTED}
+                if not (allow_calibrate and pending):
+                    return stored
+    if not allow_calibrate:
+        return profile_from_machine(default_machine(), platform=platform)
+    _NET_UPGRADE_ATTEMPTED.update((platform, ax) for ax in multidev_axes)
+    if stored is not None:
+        # Upgrade path: only the per-axis network terms are missing —
+        # re-running the full compute/kind/mem microbenchmarks would waste
+        # seconds and overwrite the stored measurements with noisier ones.
+        timer = calibrate_kw.get("timer") or time.perf_counter
+        repeats = calibrate_kw.get("repeats", 3)
+        alpha_new, bw_new = _calibrate_network(mesh, timer, repeats)
+        alpha = dict(stored.net_alpha_s)
+        alpha.update(alpha_new)
+        bw = dict(stored.net_bw)
+        bw.update(bw_new)
+        prof = dataclasses.replace(
+            stored, net_alpha_s=tuple(sorted(alpha.items())),
+            net_bw=tuple(sorted(bw.items())), net_calibrated=bool(alpha))
+    else:
+        prof = calibrate(mesh=mesh, platform=platform, **calibrate_kw)
+    if cache is not None:
+        cache.put_machine(platform, prof.to_json())
+    return prof
 
 
 def _spec_for(mesh: Mesh, grid: Tuple[int, ...], cand_decomp: str,
@@ -146,20 +241,55 @@ def enumerate_candidates(grid: Tuple[int, ...], mesh: Mesh,
 
 
 def rank_candidates(cands: Sequence[Candidate], grid: Tuple[int, ...],
-                    mesh: Mesh, machine: Machine,
-                    dtype_bytes: int = 8) -> List[Tuple[float, Candidate]]:
-    """(predicted seconds, candidate), cheapest first — the pruning pass."""
+                    mesh: Mesh, machine,
+                    dtype_bytes: int = 8,
+                    kinds: Optional[Sequence[str]] = None
+                    ) -> List[Tuple[float, Candidate]]:
+    """(predicted seconds, candidate), cheapest first — the pruning pass.
+
+    With ``kinds`` the model is kind-aware: each candidate is priced on its
+    own R2C-padded effective grid (padding depends on the decomposition) and
+    with per-kind stage costs.  ``kinds=None`` reproduces the legacy
+    C2C-on-the-logical-grid pricing.
+    """
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    kinds = tuple(kinds) if kinds is not None else None
     ranked = []
     for cand in cands:
         dec = make_decomposition(cand.decomp, cand.mesh_axes, len(grid))
+        eff = (effective_grid(grid, dec, axis_sizes, kinds)
+               if kinds is not None else None)
         pred = predict_plan_time(grid, dec, axis_sizes, machine,
                                  backend=cand.backend,
                                  n_chunks=cand.n_chunks,
-                                 dtype_bytes=dtype_bytes)
+                                 dtype_bytes=dtype_bytes,
+                                 kinds=kinds, eff_grid=eff)
         ranked.append((pred["t_total_s"], cand))
     ranked.sort(key=lambda t: t[0])
     return ranked
+
+
+def synth_input(arg: jax.ShapeDtypeStruct, seed: int = 0) -> jax.Array:
+    """A realistic, correctly-sharded input for one measurement run.
+
+    C2C candidates get *genuinely complex* data — a float draw cast to
+    complex would hand XLA an all-zero imaginary plane it can constant-fold
+    or otherwise favor unrealistically — while rfft/dct pipelines get real
+    data in the pipeline's real input dtype.
+    """
+    rng = np.random.default_rng(seed)
+    # Draw at single precision unless the target is double: drawing at
+    # numpy's float64 default would materialize 4x the host bytes of the
+    # array being synthesized (2 GiB of temporaries for a 512^3 c64 grid).
+    real_dt = (np.float64 if np.dtype(arg.dtype) in (np.complex128,
+                                                     np.float64)
+               else np.float32)
+    if jnp.issubdtype(arg.dtype, jnp.complexfloating):
+        host = (rng.standard_normal(arg.shape, dtype=real_dt)
+                + 1j * rng.standard_normal(arg.shape, dtype=real_dt))
+    else:
+        host = rng.standard_normal(arg.shape, dtype=real_dt)
+    return jax.device_put(jnp.asarray(host).astype(arg.dtype), arg.sharding)
 
 
 def measure_candidate(cand: Candidate, grid: Tuple[int, ...], mesh: Mesh,
@@ -177,16 +307,9 @@ def measure_candidate(cand: Candidate, grid: Tuple[int, ...], mesh: Mesh,
                      cand.backend, cand.n_chunks, inverse, len(batch_shape))
     exe = compile_pipeline(mesh, spec, batch_shape=batch_shape, dtype=dtype)
     arg = input_struct(mesh, spec, batch_shape, dtype)
-    rng = np.random.default_rng(0)
-    host = rng.standard_normal(arg.shape, dtype=np.float32)
-    x = jax.device_put(jnp.asarray(host, dtype=arg.dtype), arg.sharding)
-    jax.block_until_ready(exe(x))  # warm-up (plus any lazy init)
-    best = float("inf")
-    for _ in range(max(repeats, 1)):
-        t0 = time.perf_counter()
-        jax.block_until_ready(exe(x))
-        best = min(best, time.perf_counter() - t0)
-    return best
+    x = synth_input(arg)
+    # _time_best's first call doubles as the warm-up (plus any lazy init).
+    return _time_best(lambda: exe(x), time.perf_counter, repeats)
 
 
 def _default_candidate(cands: Sequence[Candidate]) -> Optional[Candidate]:
@@ -202,22 +325,32 @@ def tune(grid: Sequence[int], mesh: Mesh, *,
          kinds: Optional[Sequence[str]] = None, dtype=jnp.complex64,
          inverse: bool = False, batch_shape: Sequence[int] = (),
          mode: str = "auto", cache: Optional[TuningCache] = None,
-         machine: Optional[Machine] = None, top_k: int = 3,
+         machine=None, top_k: int = 3,
          backends: Sequence[str] = BACKENDS,
          max_chunks: Optional[int] = None, repeats: int = 3) -> TunedPlan:
     """Pick the best plan for one problem key; see the module docstring.
 
     ``mode="auto"``       enumerate -> prune -> measure top_k -> persist.
-    ``mode="heuristic"``  model-only argmin; no timing, no disk.
+    ``mode="heuristic"``  model-only argmin; no timing, no disk writes.
+
+    ``machine=None`` resolves the calibrated :class:`MachineProfile` via
+    :func:`resolve_profile` (load from the wisdom file, or — in auto mode —
+    calibrate and persist; ``REPRO_CALIBRATE=off`` forces model defaults).
+    Pruning is kind-aware: candidates are priced with ``kinds`` and their
+    decomposition's R2C-padded effective grid.
 
     The returned :class:`TunedPlan` carries the winning (decomp, mesh_axes,
     backend, n_chunks) plus its predicted and (for auto) measured times.
+    Only searches over the **unrestricted** space (all ``backends``, no
+    ``max_chunks`` cap) are persisted: a restricted search's winner must
+    never shadow — or poison — the plan an unrestricted caller would get.
     """
     grid = tuple(grid)
     batch_shape = tuple(batch_shape)
     kinds = tuple(kinds) if kinds is not None else ("fft",) * len(grid)
     if mode not in ("auto", "heuristic"):
         raise ValueError(f"tune mode must be auto|heuristic, got {mode!r}")
+    unrestricted = set(BACKENDS).issubset(set(backends)) and max_chunks is None
 
     key = tuning_key(grid=grid, mesh_shape=tuple(mesh.devices.shape),
                      mesh_axes=tuple(mesh.axis_names), kinds=kinds,
@@ -243,9 +376,18 @@ def tune(grid: Sequence[int], mesh: Mesh, *,
         raise ValueError(
             f"no valid plan for grid {grid} on mesh "
             f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
-    machine = machine or default_machine()
+    if machine is None:
+        # Heuristic mode stays measurement-free but still *reads* wisdom:
+        # a profile calibrated by an earlier auto run (any process) is
+        # loaded from the global cache when no explicit cache was passed.
+        # (NB: `cache or ...` would be wrong — an empty TuningCache is
+        # falsy through __len__.)
+        profile_cache = cache if cache is not None else global_tuning_cache()
+        machine = resolve_profile(profile_cache, mesh=mesh,
+                                  allow_calibrate=(mode == "auto"))
     dtype_bytes = jnp.dtype(dtype).itemsize
-    ranked = rank_candidates(cands, grid, mesh, machine, dtype_bytes)
+    ranked = rank_candidates(cands, grid, mesh, machine, dtype_bytes,
+                             kinds=kinds)
 
     if mode == "heuristic":
         pred, best = ranked[0]
@@ -272,6 +414,10 @@ def tune(grid: Sequence[int], mesh: Mesh, *,
                      backend=best_cand.backend, n_chunks=best_cand.n_chunks,
                      predicted_s=predicted.get(best_cand, 0.0),
                      measured_s=best_time, source="measured",
-                     baseline_s=baseline_time)
-    cache.put(key, plan)
+                     baseline_s=baseline_time, ts=time.time())
+    if unrestricted:
+        # A restricted winner (e.g. backends=("xla",) or max_chunks=2) was
+        # picked from a smaller space under the same key; persisting it
+        # would permanently replace a better unrestricted plan.
+        cache.put(key, plan)
     return plan

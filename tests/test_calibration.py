@@ -1,0 +1,413 @@
+"""Calibrated, kind-aware tuner cost model.
+
+Three layers, all hermetic (no wall-clock assertions — timing goes through
+an injected fake timer):
+
+1. the kind-aware pricing in ``perfmodel.predict_plan_time`` (pure math);
+2. ``calibrate()`` / ``MachineProfile`` round-trips through the wisdom
+   file's ``"machine"`` section and ``resolve_profile``'s load-or-calibrate
+   policy (in-process, single CPU device);
+3. the acceptance case: a constructed problem where the legacy C2C cost
+   model and the kind-aware model *disagree* on the best plan, and
+   ``tune(mode="heuristic")`` follows the kind-aware ranking (subprocess on
+   the fake 8-device mesh).
+"""
+import itertools
+import json
+
+import pytest
+
+from conftest import run_subprocess
+from repro.core.decomp import pencil_nd
+from repro.core.perfmodel import (CPU_CORE, MachineProfile, calibrate,
+                                  kind_dim_flops, predict_plan_time,
+                                  profile_from_machine)
+from repro.core.plan import TuningCache
+
+AXIS_SIZES = {"data": 2, "model": 4}
+GRID = (8, 8, 16)
+PENCIL = pencil_nd(("data", "model"), 3)
+
+
+def fake_timer():
+    """Deterministic monotone clock: every measured interval is exactly 1s."""
+    c = itertools.count()
+    return lambda: float(next(c))
+
+
+# ---------------------------------------------------------------------------
+# Kind-aware pricing (pure)
+# ---------------------------------------------------------------------------
+
+def test_kinds_none_reproduces_legacy_model():
+    t_old = predict_plan_time(GRID, PENCIL, AXIS_SIZES, CPU_CORE)
+    t_new = predict_plan_time(GRID, PENCIL, AXIS_SIZES, CPU_CORE,
+                              kinds=("fft",) * 3, eff_grid=GRID)
+    assert t_new["t_total_s"] == pytest.approx(t_old["t_total_s"], rel=1e-12)
+
+
+def test_rfft_predicted_cheaper_than_fft():
+    """Half the stage-0 butterflies and smaller padded transposes."""
+    t_fft = predict_plan_time(GRID, PENCIL, AXIS_SIZES, CPU_CORE,
+                              kinds=("fft",) * 3, eff_grid=GRID)
+    t_rfft = predict_plan_time(GRID, PENCIL, AXIS_SIZES, CPU_CORE,
+                               kinds=("rfft", "fft", "fft"),
+                               eff_grid=(6, 8, 16))
+    assert t_rfft["t_total_s"] < t_fft["t_total_s"]
+    assert t_rfft["t_comp_s"] < t_fft["t_comp_s"]
+
+
+def test_dct2_predicted_costlier_than_fft():
+    """R2R is priced as its double-length C2C composition."""
+    t_fft = predict_plan_time(GRID, PENCIL, AXIS_SIZES, CPU_CORE,
+                              kinds=("fft",) * 3, eff_grid=GRID)
+    t_dct = predict_plan_time(GRID, PENCIL, AXIS_SIZES, CPU_CORE,
+                              kinds=("dct2", "fft", "fft"), eff_grid=GRID)
+    assert t_dct["t_total_s"] > t_fft["t_total_s"]
+    assert kind_dim_flops(GRID, GRID, 0, "dct2") > \
+        kind_dim_flops(GRID, GRID, 0, "fft")
+
+
+def test_predictions_use_eff_grid_volumes():
+    """The padded frequency dim must change the modelled transpose bytes."""
+    kinds = ("rfft", "fft", "fft")
+    t_pad = predict_plan_time(GRID, PENCIL, AXIS_SIZES, CPU_CORE,
+                              kinds=kinds, eff_grid=(6, 8, 16))
+    t_nopad = predict_plan_time(GRID, PENCIL, AXIS_SIZES, CPU_CORE,
+                                kinds=kinds, eff_grid=(8, 8, 16))
+    assert t_pad["t_comm_s"] < t_nopad["t_comm_s"]
+
+
+def test_effective_grid_depends_on_decomposition():
+    """Two mesh-axis orderings pad the same logical grid differently."""
+    from repro.core.pipeline import effective_grid
+    sizes = {"data": 2, "model": 4}
+    kinds = ("rfft", "fft", "fft")
+    eff_dm = effective_grid(GRID, pencil_nd(("data", "model"), 3), sizes,
+                            kinds)
+    eff_md = effective_grid(GRID, pencil_nd(("model", "data"), 3), sizes,
+                            kinds)
+    assert eff_dm == (6, 8, 16)   # 8//2+1=5 padded to lcm(2)
+    assert eff_md == (8, 8, 16)   # padded to lcm(4)
+
+
+def test_matmul_rfft_not_halved():
+    """transforms._rfft on the matmul backend computes the full C2C."""
+    assert kind_dim_flops(GRID, GRID, 0, "rfft", "matmul") == \
+        pytest.approx(kind_dim_flops(GRID, GRID, 0, "fft", "matmul"))
+    assert kind_dim_flops(GRID, GRID, 0, "rfft", "xla") == \
+        pytest.approx(0.5 * kind_dim_flops(GRID, GRID, 0, "fft", "xla"))
+
+
+def test_kind_scale_applies_to_xla_only():
+    """kind_scale is calibrated against XLA's analytic ratios; matmul
+    already charges its structural cost (full C2C rfft), so scaling it too
+    would double-count."""
+    kinds = ("rfft", "fft", "fft")
+    eff = (6, 8, 16)
+    plain = profile_from_machine(CPU_CORE, platform="cpu")
+    scaled = MachineProfile(base=CPU_CORE, platform="cpu", calibrated=True,
+                            kind_scale=(("r2c", 2.0),),
+                            mem_bw=CPU_CORE.mem_bw)
+    t_x_plain = predict_plan_time(GRID, PENCIL, AXIS_SIZES, plain,
+                                  kinds=kinds, eff_grid=eff)
+    t_x_scaled = predict_plan_time(GRID, PENCIL, AXIS_SIZES, scaled,
+                                   kinds=kinds, eff_grid=eff)
+    assert t_x_scaled["t_comp_s"] > t_x_plain["t_comp_s"]
+    t_m_plain = predict_plan_time(GRID, PENCIL, AXIS_SIZES, plain,
+                                  backend="matmul", kinds=kinds,
+                                  eff_grid=eff)
+    t_m_scaled = predict_plan_time(GRID, PENCIL, AXIS_SIZES, scaled,
+                                   backend="matmul", kinds=kinds,
+                                   eff_grid=eff)
+    assert t_m_scaled["t_comp_s"] == pytest.approx(t_m_plain["t_comp_s"])
+
+
+def test_profile_fallbacks_to_base_machine():
+    prof = profile_from_machine(CPU_CORE, platform="cpu")
+    assert not prof.calibrated and not prof.net_calibrated
+    assert prof.flops_for("xla") == CPU_CORE.flops
+    assert prof.flops_for("matmul") == CPU_CORE.flops
+    assert prof.scale_for("r2c") == 1.0
+    assert prof.alpha_for("anything") == CPU_CORE.net_alpha_s
+    assert prof.bw_for("anything") == CPU_CORE.net_bw
+    assert prof.eff_mem_bw == CPU_CORE.mem_bw
+
+
+def test_profile_overrides_per_backend_and_axis():
+    prof = MachineProfile(base=CPU_CORE, platform="cpu", calibrated=True,
+                          backend_flops=(("matmul", 2e9),),
+                          kind_scale=(("r2r", 3.0),),
+                          net_alpha_s=(("data", 1e-6),),
+                          net_bw=(("data", 5e9),), mem_bw=9e9)
+    assert prof.flops_for("matmul") == 2e9
+    assert prof.flops_for("xla") == CPU_CORE.flops      # fallback
+    assert prof.scale_for("r2r") == 3.0
+    assert prof.alpha_for("data") == 1e-6
+    assert prof.alpha_for("model") == CPU_CORE.net_alpha_s
+    assert prof.bw_for("data") == 5e9
+    assert prof.eff_mem_bw == 9e9
+
+
+# ---------------------------------------------------------------------------
+# Calibration harness + persistence (in-process, fake timer)
+# ---------------------------------------------------------------------------
+
+def test_calibrate_roundtrip_and_honest_flags(tmp_path):
+    prof = calibrate(timer=fake_timer(), repeats=1, platform="cpu")
+    assert prof.calibrated is True
+    # single-device process: network terms fell back to model defaults
+    assert prof.net_calibrated is False
+    assert prof.net_alpha_s == () and prof.net_bw == ()
+    assert dict(prof.backend_flops).keys() == {"xla", "matmul"}
+    assert set(dict(prof.kind_scale)) == {"c2c", "r2c", "r2r"}
+    assert all(v > 0 for _, v in prof.backend_flops)
+    assert prof.mem_bw > 0
+
+    # JSON round-trip is exact
+    assert MachineProfile.from_json(
+        json.loads(json.dumps(prof.to_json()))) == prof
+
+    # wisdom-file "machine" section round-trip (fresh-process analogue)
+    path = str(tmp_path / "tuning.json")
+    TuningCache(path).put_machine("cpu", prof.to_json())
+    reloaded = TuningCache(path).get_machine("cpu")
+    assert MachineProfile.from_json(reloaded) == prof
+
+
+def test_calibrate_deterministic_under_fake_timer():
+    p1 = calibrate(timer=fake_timer(), repeats=1, platform="cpu")
+    p2 = calibrate(timer=fake_timer(), repeats=1, platform="cpu")
+    assert p1 == p2
+
+
+def test_resolve_profile_env_off(monkeypatch, tmp_path):
+    from repro.core.tuner import resolve_profile
+    monkeypatch.setenv("REPRO_CALIBRATE", "off")
+    cache = TuningCache(str(tmp_path / "t.json"))
+    prof = resolve_profile(cache, timer=fake_timer(), repeats=1)
+    assert prof.calibrated is False          # honest: pure model defaults
+    assert cache.get_machine(prof.platform) is None   # and nothing persisted
+
+
+def test_resolve_profile_load_or_calibrate(monkeypatch, tmp_path):
+    from repro.core.tuner import resolve_profile
+    monkeypatch.delenv("REPRO_CALIBRATE", raising=False)
+    path = str(tmp_path / "t.json")
+    cache = TuningCache(path)
+
+    # no stored profile + calibration forbidden -> defaults
+    prof0 = resolve_profile(cache, allow_calibrate=False)
+    assert prof0.calibrated is False
+
+    # calibration allowed -> measured profile, persisted for later processes
+    prof1 = resolve_profile(cache, timer=fake_timer(), repeats=1)
+    assert prof1.calibrated is True
+    assert cache.get_machine(prof1.platform) is not None
+
+    # a fresh cache (fresh-process analogue) loads it without recalibrating:
+    # no timer is provided, so any calibration attempt would use the real
+    # clock and not compare equal.
+    cache2 = TuningCache(path)
+    prof2 = resolve_profile(cache2, allow_calibrate=False)
+    assert prof2 == prof1
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: models disagree, the kind-aware ranking is used (subprocess)
+# ---------------------------------------------------------------------------
+
+def test_heuristic_uses_kind_aware_ranking_when_models_disagree():
+    """Constructed case: calibration found this xla build's rfft
+    pathologically slow.  The kind-blind C2C model cannot see that and
+    keeps the xla backend; the kind-aware model switches the plan (to the
+    matmul backend, whose R2C cost is structural, not scaled) — and
+    tune(mode="heuristic") follows the kind-aware ranking."""
+    out = run_subprocess("""
+import jax
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
+from repro.core.perfmodel import CPU_CORE, MachineProfile
+from repro.core.tuner import enumerate_candidates, rank_candidates, tune
+
+grid = (8, 8, 16)
+kinds = ("rfft", "fft", "fft")
+prof = MachineProfile(base=CPU_CORE, platform="cpu", calibrated=True,
+                      kind_scale=(("r2c", 1000.0),), mem_bw=CPU_CORE.mem_bw)
+cands = enumerate_candidates(grid, mesh, kinds)
+blind = rank_candidates(cands, grid, mesh, prof)[0][1]          # legacy C2C
+aware = rank_candidates(cands, grid, mesh, prof, kinds=kinds)[0][1]
+plan = tune(grid, mesh, kinds=kinds, mode="heuristic", machine=prof)
+chosen = (plan.decomp, plan.mesh_axes, plan.backend, plan.n_chunks)
+print("disagree", int((blind.decomp, blind.mesh_axes, blind.backend,
+                       blind.n_chunks) != (aware.decomp, aware.mesh_axes,
+                                           aware.backend, aware.n_chunks)))
+print("blind_backend", blind.backend)
+print("aware_backend", aware.backend)
+print("used_aware", int(chosen == (aware.decomp, aware.mesh_axes,
+                                   aware.backend, aware.n_chunks)))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert vals["disagree"] == "1"
+    assert vals["blind_backend"] == "xla"
+    assert vals["aware_backend"] == "matmul"
+    assert vals["used_aware"] == "1"
+
+
+def test_heuristic_loads_persisted_profile_from_global_cache():
+    """The zero-overhead mode must benefit from calibration done by an
+    earlier auto run: with a stored profile in the global wisdom file,
+    tune(mode="heuristic") ranks with it (no cache argument needed)."""
+    out = run_subprocess("""
+import os, tempfile
+os.environ["REPRO_TUNING_CACHE"] = os.path.join(tempfile.mkdtemp(),
+                                                "tuning.json")
+import jax
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
+from repro.core.perfmodel import CPU_CORE, MachineProfile
+from repro.core.plan import global_tuning_cache
+from repro.core.tuner import enumerate_candidates, rank_candidates, tune
+
+grid = (8, 8, 16)
+kinds = ("rfft", "fft", "fft")
+prof = MachineProfile(base=CPU_CORE, platform=jax.default_backend(),
+                      calibrated=True, net_calibrated=True,
+                      kind_scale=(("r2c", 1000.0),), mem_bw=CPU_CORE.mem_bw)
+global_tuning_cache().put_machine(jax.default_backend(), prof.to_json())
+
+cands = enumerate_candidates(grid, mesh, kinds)
+aware = rank_candidates(cands, grid, mesh, prof, kinds=kinds)[0][1]
+plan = tune(grid, mesh, kinds=kinds, mode="heuristic")   # no machine/cache
+print("used_stored", int((plan.decomp, plan.mesh_axes, plan.backend,
+                          plan.n_chunks) == (aware.decomp, aware.mesh_axes,
+                                             aware.backend, aware.n_chunks)))
+print("backend", plan.backend)
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert vals["used_stored"] == "1"
+    # the pathological stored r2c scale drags the choice to the matmul
+    # backend; the default constants would have kept xla on this case
+    assert vals["backend"] == "matmul"
+
+
+def test_stored_profile_upgraded_with_network_measurements():
+    """A profile calibrated on 1 device (net_calibrated=False) must not be
+    served forever once a multi-device mesh could measure all_to_all: the
+    first auto resolution recalibrates (once per process) and persists."""
+    out = run_subprocess("""
+import itertools, os, tempfile
+import jax
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
+from repro.core.plan import TuningCache
+import repro.core.tuner as tuner_mod
+
+def fake_timer():
+    c = itertools.count()
+    return lambda: float(next(c))
+
+plat = jax.default_backend()
+path = os.path.join(tempfile.mkdtemp(), "tuning.json")
+cache = TuningCache(path)
+# a profile calibrated with no mesh: network terms are model defaults
+stored = tuner_mod.calibrate(mesh=None, timer=fake_timer(), repeats=1,
+                             platform=plat)
+cache.put_machine(plat, stored.to_json())
+
+calls = []
+orig = tuner_mod._calibrate_network
+def spy(m, timer, repeats):
+    calls.append(m is not None)
+    return orig(m, timer, repeats)
+tuner_mod._calibrate_network = spy
+
+p1 = tuner_mod.resolve_profile(cache, mesh=mesh, timer=fake_timer(),
+                               repeats=1)
+p2 = tuner_mod.resolve_profile(cache, mesh=mesh, timer=fake_timer(),
+                               repeats=1)
+print("recalibrations", len(calls))
+print("with_mesh", int(all(calls)))
+print("second_from_store", int(p2 == p1))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert vals["recalibrations"] == "1"      # upgraded once, then served
+    assert vals["with_mesh"] == "1"           # and with the mesh to measure
+    assert vals["second_from_store"] == "1"
+
+
+def test_stored_profile_upgraded_for_uncovered_mesh_axes():
+    """Network terms are keyed by mesh-axis name: a profile calibrated on
+    ('data','model') must be upgraded — not served as-is — for a mesh named
+    ('x','y'), and the upgrade must keep the previously measured axes."""
+    out = run_subprocess("""
+import itertools, os, tempfile
+import jax
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("x", "y"))
+from repro.core.plan import TuningCache
+import repro.core.tuner as tuner_mod
+
+def fake_timer():
+    c = itertools.count()
+    return lambda: float(next(c))
+
+plat = jax.default_backend()
+path = os.path.join(tempfile.mkdtemp(), "tuning.json")
+cache = TuningCache(path)
+base = tuner_mod.calibrate(mesh=None, timer=fake_timer(), repeats=1,
+                           platform=plat)
+import dataclasses
+stored = dataclasses.replace(base, net_calibrated=True,
+                             net_alpha_s=(("data", 1e-6), ("model", 2e-6)),
+                             net_bw=(("data", 1e9), ("model", 2e9)))
+cache.put_machine(plat, stored.to_json())
+
+calls = []
+orig = tuner_mod._calibrate_network
+def spy(m, timer, repeats):
+    calls.append(1)
+    return orig(m, timer, repeats)
+tuner_mod._calibrate_network = spy
+
+p1 = tuner_mod.resolve_profile(cache, mesh=mesh, timer=fake_timer(),
+                               repeats=1)
+print("recalibrated", len(calls))
+alpha = dict(p1.net_alpha_s)
+print("kept_old_axes", int("data" in alpha and "model" in alpha))
+print("net_calibrated", int(p1.net_calibrated))
+# A second, differently-named mesh in the SAME process must still get its
+# own upgrade attempt (the retry gate is per (platform, axis), not
+# per platform) — and a repeat on the same axes must not re-measure.
+mesh2 = make_mesh((2, 4), ("p", "q"))
+tuner_mod.resolve_profile(cache, mesh=mesh2, timer=fake_timer(), repeats=1)
+print("second_mesh_recal", len(calls))
+tuner_mod.resolve_profile(cache, mesh=mesh2, timer=fake_timer(), repeats=1)
+print("repeat_no_recal", len(calls))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert vals["recalibrated"] == "1"
+    assert vals["kept_old_axes"] == "1"
+    assert vals["net_calibrated"] == "1"
+    assert vals["second_mesh_recal"] == "2"
+    assert vals["repeat_no_recal"] == "2"
+
+
+def test_heuristic_tuned_poisson_matches_untuned():
+    """Kind-aware heuristic tuning on a DCT pipeline stays numerically
+    identical to the static default (and exercises dct2 ranking)."""
+    out = run_subprocess("""
+import numpy as np, jax.numpy as jnp
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
+from repro.core import poisson_solve
+rng = np.random.default_rng(5)
+rhs = rng.standard_normal((16, 16, 16)).astype(np.float32)
+rhs -= rhs.mean()
+topo = ("periodic", "periodic", "bounded")
+phi0 = np.asarray(poisson_solve(jnp.asarray(rhs), mesh=mesh, topology=topo))
+phi1 = np.asarray(poisson_solve(jnp.asarray(rhs), mesh=mesh, topology=topo,
+                                tuning="heuristic"))
+print("diff", float(np.max(np.abs(phi0 - phi1))))
+""")
+    assert float(out.split()[-1]) < 1e-5

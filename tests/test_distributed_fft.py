@@ -117,6 +117,27 @@ print("res", float(np.max(np.abs(lap - rhs)) / np.max(np.abs(rhs))))
     assert float(out.split()[-1]) < 1e-3
 
 
+def test_poisson_batched_null_mode():
+    """Regression: the null (mean) mode must be zeroed for EVERY leading
+    batch element, not just batch index 0 — a batched solve must agree with
+    per-slice solves."""
+    out = run_subprocess(COMMON + """
+n = 16
+rhs = rng.standard_normal((2, n, n, n)).astype(np.float32)
+rhs -= rhs.mean(axis=(1, 2, 3), keepdims=True)
+phi_b = np.asarray(poisson_solve(jnp.asarray(rhs), mesh=mesh))
+phi_0 = np.asarray(poisson_solve(jnp.asarray(rhs[0]), mesh=mesh))
+phi_1 = np.asarray(poisson_solve(jnp.asarray(rhs[1]), mesh=mesh))
+print("d0", float(np.max(np.abs(phi_b[0] - phi_0))))
+print("d1", float(np.max(np.abs(phi_b[1] - phi_1))))
+print("mean1", float(np.abs(phi_b[1].mean())))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert float(vals["d0"]) < 1e-5
+    assert float(vals["d1"]) < 1e-5      # batch 1 was broken before the fix
+    assert float(vals["mean1"]) < 1e-5   # its mean mode is now zeroed
+
+
 def test_fft2d_slab_mesh():
     """2-D transform over one mesh axis (degenerate slab == 2-D pencil)."""
     out = run_subprocess(COMMON + """

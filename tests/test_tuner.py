@@ -83,6 +83,12 @@ def _plan(**kw):
     return TunedPlan(**base)
 
 
+def _no_ts(plan):
+    """Compare plans modulo the save timestamp put() stamps on them."""
+    import dataclasses
+    return dataclasses.replace(plan, ts=0.0)
+
+
 def test_tuning_cache_disk_roundtrip(tmp_path):
     path = str(tmp_path / "tuning.json")
     key = tuning_key(grid=(8, 8, 16), mesh_shape=(2, 4),
@@ -93,7 +99,7 @@ def test_tuning_cache_disk_roundtrip(tmp_path):
     cache.put(key, _plan())
     # A fresh instance (fresh process analogue) must see the same plan.
     cache2 = TuningCache(path)
-    assert cache2.get(key) == _plan()
+    assert _no_ts(cache2.get(key)) == _plan()
     assert cache2.stats()["hits"] == 1
 
 
@@ -104,7 +110,7 @@ def test_tuning_cache_survives_corrupt_file(tmp_path):
     cache = TuningCache(path)  # must not raise
     assert len(cache) == 0
     cache.put("k", _plan())
-    assert TuningCache(path).get("k") == _plan()
+    assert _no_ts(TuningCache(path).get("k")) == _plan()
 
 
 def test_tuning_cache_rejects_stale_schema(tmp_path):
@@ -112,6 +118,72 @@ def test_tuning_cache_rejects_stale_schema(tmp_path):
     with open(path, "w") as f:
         json.dump({"version": 999, "plans": {"k": {"bogus": 1}}}, f)
     assert len(TuningCache(path)) == 0
+
+
+def test_tuning_cache_cross_process_merge(tmp_path):
+    """Two processes tuning different problems against one wisdom file must
+    both keep their plans: every save re-reads and merges under the file
+    lock instead of last-writer-wins."""
+    path = str(tmp_path / "tuning.json")
+    # Both "processes" open the file before either has written anything.
+    c1 = TuningCache(path)
+    c2 = TuningCache(path)
+    c1.put("problem_a", _plan(decomp="pencil"))
+    c2.put("problem_b", _plan(decomp="slab"))   # must not erase problem_a
+    fresh = TuningCache(path)
+    assert _no_ts(fresh.get("problem_a")) == _plan(decomp="pencil")
+    assert _no_ts(fresh.get("problem_b")) == _plan(decomp="slab")
+
+
+def test_tuning_cache_merge_newest_ts_wins(tmp_path):
+    """Same key from two processes: the most recently measured plan wins,
+    in both directions (disk newer than memory and vice versa)."""
+    path = str(tmp_path / "tuning.json")
+    c1 = TuningCache(path)
+    c2 = TuningCache(path)
+    c1.put("k", _plan(n_chunks=1, ts=100.0))
+    c2.put("k", _plan(n_chunks=2, ts=200.0))      # newer: replaces
+    assert TuningCache(path).get("k").n_chunks == 2
+    c1.put("k", _plan(n_chunks=4, ts=50.0))       # older: disk copy kept
+    assert TuningCache(path).get("k").n_chunks == 2
+
+
+def test_tuning_cache_put_stamps_unstamped_plans(tmp_path):
+    """A directly-constructed plan (ts=0.0) written over an existing newer
+    entry must still win: put() stamps it with the save time, so the write
+    is never a silent no-op."""
+    path = str(tmp_path / "tuning.json")
+    c = TuningCache(path)
+    c.put("k", _plan(n_chunks=2, ts=100.0))
+    c.put("k", _plan(n_chunks=8))                 # no ts: stamped at put
+    got = TuningCache(path).get("k")
+    assert got.n_chunks == 8
+    assert got.ts > 100.0
+
+
+def test_tuning_cache_machine_section_roundtrip(tmp_path):
+    """The "machine" section persists alongside plans and survives merges."""
+    path = str(tmp_path / "tuning.json")
+    c1 = TuningCache(path)
+    c1.put_machine("cpu", {"mem_bw": 1.0})
+    c2 = TuningCache(path)
+    c2.put("k", _plan())                           # plan write must keep it
+    fresh = TuningCache(path)
+    assert fresh.get_machine("cpu")["mem_bw"] == 1.0
+    assert _no_ts(fresh.get("k")) == _plan()
+    assert fresh.stats()["machines"] == 1
+
+
+def test_tuning_cache_machine_merge_newest_save_wins(tmp_path):
+    """A process holding a stale profile must not clobber a fresher one
+    (e.g. a network-upgraded calibration) when it later saves a plan."""
+    path = str(tmp_path / "tuning.json")
+    c_stale = TuningCache(path)
+    c_stale.put_machine("cpu", {"gen": 1, "_saved_ts": 100.0})
+    c_fresh = TuningCache(path)
+    c_fresh.put_machine("cpu", {"gen": 2, "_saved_ts": 200.0})
+    c_stale.put("k", _plan())                      # unrelated plan save
+    assert TuningCache(path).get_machine("cpu")["gen"] == 2
 
 
 def test_tuning_key_separates_problems():
@@ -127,12 +199,38 @@ def test_tuning_key_separates_problems():
     assert len({k1, k2, k3}) == 3
 
 
+def test_synth_input_realistic(cpu_mesh):
+    """Measurement inputs: genuinely complex for C2C (an all-zero imaginary
+    plane is XLA-constant-foldable), correctly real for rfft pipelines."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.decomp import make_decomposition
+    from repro.core.pipeline import input_struct, make_spec
+    from repro.core.tuner import synth_input
+
+    dec = make_decomposition("pencil", ("data", "model"), 3)
+    spec_c = make_spec(cpu_mesh, (8, 8, 16), dec, ("fft",) * 3)
+    arg_c = input_struct(cpu_mesh, spec_c, (), jnp.complex64)
+    x = synth_input(arg_c)
+    assert x.dtype == jnp.complex64
+    assert float(np.min(np.abs(np.imag(np.asarray(x))))) > 0.0
+
+    spec_r = make_spec(cpu_mesh, (8, 8, 16), dec, ("rfft", "fft", "fft"))
+    arg_r = input_struct(cpu_mesh, spec_r, (), jnp.complex64)
+    y = synth_input(arg_r)
+    assert y.dtype == jnp.float32          # rfft pipeline takes real input
+
+
 # ---------------------------------------------------------------------------
 # End-to-end tuning on the fake 8-device mesh (subprocess)
 # ---------------------------------------------------------------------------
 
 TUNE_COMMON = """
 import os, tempfile, numpy as np, jax, jax.numpy as jnp
+# Isolate from any ambient user wisdom: heuristic tuning reads the global
+# cache for a calibrated machine profile, so tests pin it to a tmpdir.
+os.environ["REPRO_TUNING_CACHE"] = os.path.join(tempfile.mkdtemp(),
+                                                "global.json")
 from repro.compat import make_mesh
 mesh = make_mesh((2, 4), ("data", "model"))
 from repro.core import TuningCache, tune
@@ -186,6 +284,58 @@ print("nondefault", int((plan.decomp, plan.backend, plan.n_chunks)
     vals = dict(l.split() for l in out.strip().splitlines())
     assert vals["nondefault"] == "1"
     assert vals["decomp"] == "slab"
+
+
+def test_restricted_tune_does_not_poison_cache():
+    """Acceptance: a restricted search (backends subset / chunk cap) must
+    never persist its winner under the unrestricted key, so a later
+    unrestricted caller is never served the restricted plan."""
+    out = run_subprocess(TUNE_COMMON + """
+grid = (8, 8, 16)
+p_r = tune(grid, mesh, cache=TuningCache(path), backends=("matmul",),
+           top_k=2, repeats=1)
+print("restricted_backend", p_r.backend)
+print("persisted_after_restricted", len(TuningCache(path)))
+c2 = TuningCache(path)
+p_u = tune(grid, mesh, cache=c2, top_k=2, repeats=1)
+# the unrestricted call re-tuned over the full space (cache had no plan),
+# it did not inherit the restricted winner from disk
+print("unrestricted_source", p_u.source)
+print("unrestricted_measured_baseline", int(p_u.baseline_s > 0))
+print("persisted_after_unrestricted", len(TuningCache(path)))
+# chunk caps are restrictions too
+p_c = tune((16, 16, 16), mesh, cache=TuningCache(path), max_chunks=1,
+           top_k=1, repeats=1)
+import json
+plans = json.load(open(path))["plans"]
+print("capped_persisted", int(any("16,16,16" in k for k in plans)))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert vals["persisted_after_restricted"] == "0"
+    assert vals["unrestricted_source"] == "measured"
+    assert vals["unrestricted_measured_baseline"] == "1"
+    assert vals["persisted_after_unrestricted"] == "1"
+    assert vals["capped_persisted"] == "0"
+
+
+def test_auto_tune_persists_calibrated_machine_profile():
+    """mode="auto" calibrates on first use and stores the profile in the
+    wisdom file's "machine" section; heuristic calls can then load it."""
+    out = run_subprocess(TUNE_COMMON + """
+import json
+from repro.core.perfmodel import MachineProfile
+from repro.core.tuner import resolve_profile
+tune((8, 8, 16), mesh, cache=TuningCache(path), top_k=1, repeats=1)
+raw = json.load(open(path))
+print("has_machine", int("cpu" in raw.get("machine", {})))
+prof = resolve_profile(TuningCache(path), allow_calibrate=False)
+print("loaded_calibrated", int(prof.calibrated))
+print("platform", prof.platform)
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert vals["has_machine"] == "1"
+    assert vals["loaded_calibrated"] == "1"
+    assert vals["platform"] == "cpu"
 
 
 def test_fft3d_tuning_auto_matches_numpy():
