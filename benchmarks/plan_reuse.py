@@ -1,0 +1,90 @@
+"""Plan-reuse microbench: per-call overhead of the execution paths.
+
+The plan-object redesign's acceptance row: a reused ``DistributedFFT``
+must have lower per-call overhead than the legacy wrapper path, and
+``sharded_in=True`` (no entry ``device_put``) lower still.  Four rows:
+
+* ``replan_every_call`` — ``plan_fft`` + forward per call: what every call
+  paid before plans were first-class (spec construction, validation and
+  struct derivation per call; compilation is still plan-cache-hit).
+* ``wrapper_memoized``  — ``fftnd`` per call (memo lookup + dtype inference
+  + device_put + execute).
+* ``plan_reused``       — ``plan.forward`` on a held plan (device_put +
+  execute).
+* ``plan_sharded_in``   — ``plan.forward(..., sharded_in=True)`` on a
+  pre-sharded input (execute only; the zero-copy pipeline path).
+
+Run:  PYTHONPATH=src python -m benchmarks.plan_reuse [--smoke]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.compat import AxisType, make_mesh
+
+from .common import emit, time_fn
+
+N = 32
+ITERS = 30
+
+
+def run(iters: int = ITERS) -> dict:
+    from repro.core import fftnd, plan_fft
+
+    mesh = make_mesh((1, 1), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+    rng = np.random.default_rng(0)
+    x = (rng.standard_normal((N, N, N))
+         + 1j * rng.standard_normal((N, N, N))).astype(np.complex64)
+    xj = jnp.asarray(x)
+    grid = (N, N, N)
+
+    # Warm the compiled executable once; every row below reuses it, so the
+    # rows isolate pure per-call overhead differences.
+    plan = plan_fft(mesh, grid)
+    jax.block_until_ready(plan(xj))
+
+    t_replan = time_fn(lambda a: plan_fft(mesh, grid).forward(a), xj,
+                       iters=iters)
+    t_wrapper = time_fn(lambda a: fftnd(a, mesh=mesh, ndim=3), xj,
+                        iters=iters)
+    t_plan = time_fn(plan.forward, xj, iters=iters)
+    xs = jax.device_put(xj, plan.in_sharding)
+    t_sharded = time_fn(lambda a: plan.forward(a, sharded_in=True), xs,
+                        iters=iters)
+
+    emit("plan_reuse_replan_every_call", t_replan * 1e6, f"grid={N}^3")
+    emit("plan_reuse_wrapper_memoized", t_wrapper * 1e6,
+         f"vs_replan={t_replan / t_wrapper:.2f}x")
+    emit("plan_reuse_plan_reused", t_plan * 1e6,
+         f"vs_wrapper={t_wrapper / t_plan:.2f}x "
+         f"vs_replan={t_replan / t_plan:.2f}x")
+    emit("plan_reuse_plan_sharded_in", t_sharded * 1e6,
+         f"vs_plan={t_plan / t_sharded:.2f}x "
+         f"overhead_ok={int(t_sharded <= t_replan)}")
+    return {"replan": t_replan, "wrapper": t_wrapper, "plan": t_plan,
+            "sharded": t_sharded}
+
+
+def main() -> None:
+    import argparse
+    import sys
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="few iterations; fails if the reused-plan or "
+                         "sharded-in path regresses the replan path")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    t = run(iters=3 if args.smoke else ITERS)
+    # The acceptance criterion, enforced: a reused plan (and its sharded-in
+    # variant) must beat replanning every call.  The ~8x margin makes this
+    # robust to CI timing noise.
+    if t["plan"] > t["replan"] or t["sharded"] > t["replan"]:
+        print("plan_reuse: reused-plan path regressed the replan path",
+              file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

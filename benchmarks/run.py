@@ -6,13 +6,14 @@ import traceback
 
 def main() -> None:
     from . import (fig5_strong_scaling, fig6_hybrid_threads, fig7_tpu_scaling,
-                   fig8_poisson, fig9_overhead_breakdown, roofline_table,
-                   table1_stage_scheduler, table2_work_stealing, tuner_table)
+                   fig8_poisson, fig9_overhead_breakdown, plan_reuse,
+                   roofline_table, table1_stage_scheduler,
+                   table2_work_stealing, tuner_table)
     print("name,us_per_call,derived")
     for mod in (table1_stage_scheduler, table2_work_stealing,
                 fig5_strong_scaling, fig6_hybrid_threads, fig7_tpu_scaling,
                 fig8_poisson, fig9_overhead_breakdown, roofline_table,
-                tuner_table):
+                tuner_table, plan_reuse):
         try:
             mod.run()
         except Exception:

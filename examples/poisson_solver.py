@@ -31,7 +31,7 @@ def main():
     n_dev = len(jax.devices())
     mesh = make_mesh((1, n_dev), ("data", "model"),
                          axis_types=(AxisType.Auto,) * 2)
-    from repro.core import poisson_solve
+    from repro.core import PoissonSolver
 
     rng = np.random.default_rng(0)
     # divergence of a turbulent-ish velocity field as the RHS
@@ -41,13 +41,16 @@ def main():
     dx = 2 * np.pi / n
 
     for topo in (("periodic",) * 3, ("periodic", "periodic", "bounded")):
+        # Plan once per topology: one paired forward+inverse FFT plan and a
+        # cached eigenvalue array, reused by every solve below.
         t0 = time.perf_counter()
-        phi = poisson_solve(rhs_j, mesh=mesh, topology=topo)
+        solver = PoissonSolver(mesh, (n, n, n), topology=topo)
+        phi = solver(rhs_j)
         phi = np.real(np.asarray(phi))
         t_first = time.perf_counter() - t0          # includes planning
         t0 = time.perf_counter()
         for _ in range(args.steps):
-            phi_j = poisson_solve(rhs_j, mesh=mesh, topology=topo)
+            phi_j = solver(rhs_j)
         jax.block_until_ready(phi_j)
         t_steady = (time.perf_counter() - t0) / args.steps
 

@@ -1,4 +1,9 @@
-"""Quickstart: distributed 3D FFTs with stage-per-array decomposition.
+"""Quickstart: plan-once/execute-many distributed FFTs.
+
+The core workflow is FFTW-style: build a ``DistributedFFT`` plan once
+(tuning, calibration and compilation happen there), then execute it many
+times — forward, inverse, pre-sharded, donating — with zero per-call
+planning.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 (set XLA_FLAGS=--xla_force_host_platform_device_count=8 first to see real
@@ -20,83 +25,84 @@ def main():
     # pencil decomposition wants a 2D process grid
     if n_dev >= 4 and n_dev % 2 == 0:
         mesh = make_mesh((2, n_dev // 2), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+                         axis_types=(AxisType.Auto,) * 2)
     else:
         mesh = make_mesh((1, n_dev), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+                         axis_types=(AxisType.Auto,) * 2)
     print(f"mesh: {mesh}")
 
-    from repro.core import GLOBAL_PLAN_CACHE, fft3d, ifft3d
+    from repro.core import GLOBAL_PLAN_CACHE, plan_fft
 
     rng = np.random.default_rng(0)
     x = (rng.standard_normal((32, 32, 32))
          + 1j * rng.standard_normal((32, 32, 32))).astype(np.complex64)
 
-    # --- forward + inverse C2C, pencil decomposition ------------------------
-    xk = fft3d(jnp.asarray(x), mesh=mesh)                  # plan + execute
-    xb = ifft3d(xk, mesh=mesh)
+    # --- plan once ----------------------------------------------------------
+    plan = plan_fft(mesh, (32, 32, 32))        # all planning happens here
+    print(plan.describe())
+
+    # --- execute many -------------------------------------------------------
+    xk = plan(jnp.asarray(x))                  # forward (== plan.forward)
+    xb = plan.inverse(xk)                      # paired inverse, same schedule
     print("C2C pencil roundtrip max err:",
           float(np.max(np.abs(np.asarray(xb) - x))))
+    plan(jnp.asarray(x))                       # re-execute: zero planning,
+    print("plan cache:", GLOBAL_PLAN_CACHE.stats())   # no new compiles
 
-    # --- same transform again: plan-cache hit (paper §V-B) ------------------
-    fft3d(jnp.asarray(x), mesh=mesh)
-    print("plan cache:", GLOBAL_PLAN_CACHE.stats())
+    # --- sharded-in/sharded-out pipelines -----------------------------------
+    # Lay the producer out in plan.in_sharding and the entry device_put is
+    # skipped entirely; a forward output already carries the inverse input
+    # sharding, so chained transforms are zero-copy.
+    xs = jax.device_put(jnp.asarray(x), plan.in_sharding)
+    yk = plan.forward(xs, sharded_in=True)
+    x2 = plan.inverse(yk, sharded_in=True)
+    print("sharded-in roundtrip max err:",
+          float(np.max(np.abs(np.asarray(x2) - x))))
+    print("out_struct:", plan.out_struct.shape, plan.out_struct.dtype)
 
-    # --- slab decomposition + chunk-pipelined redistribution ----------------
-    xk_slab = fft3d(jnp.asarray(x), mesh=mesh, decomp="slab",
-                    mesh_axes=("model",))
-    xk_chunk = fft3d(jnp.asarray(x), mesh=mesh, n_chunks=4)
-    print("slab vs pencil max diff:",
-          float(np.max(np.abs(np.asarray(xk_slab) - np.asarray(xk)))))
-    print("bulk vs chunk-pipelined max diff:",
-          float(np.max(np.abs(np.asarray(xk_chunk) - np.asarray(xk)))))
-
-    # --- R2C with automatic frequency padding --------------------------------
+    # --- R2C plan: real float in, padded spectrum out -----------------------
+    rplan = plan_fft(mesh, (32, 32, 32), kinds=("rfft", "fft", "fft"))
     xr = rng.standard_normal((32, 32, 32)).astype(np.float32)
-    yk = fft3d(jnp.asarray(xr), mesh=mesh, kinds=("rfft", "fft", "fft"))
-    print(f"R2C output shape: {yk.shape} (freq dim padded for the mesh)")
-    xrb = ifft3d(yk, mesh=mesh, grid=(32, 32, 32),
-                 kinds=("rfft", "fft", "fft"))
+    yk_r = rplan(jnp.asarray(xr))
+    print(f"R2C output shape: {yk_r.shape} (freq dim padded for the mesh)")
+    xrb = rplan.inverse(yk_r)
     print("R2C roundtrip max err:",
           float(np.max(np.abs(np.asarray(xrb) - xr))))
 
-    # --- MXU matmul backend (the TPU-native four-step formulation) ----------
-    yk_mm = fft3d(jnp.asarray(x), mesh=mesh, backend="matmul")
-    print("matmul-backend max diff vs xla:",
-          float(np.max(np.abs(np.asarray(yk_mm) - np.asarray(xk)))))
-
-    # --- 2-D / N-D transforms with batched leading dims ---------------------
-    from repro.core import fft2d, fftnd
-
-    x2 = (rng.standard_normal((5, 32, 32))         # batch of 5 planes
-          + 1j * rng.standard_normal((5, 32, 32))).astype(np.complex64)
-    y2 = fftnd(jnp.asarray(x2), mesh=mesh, ndim=2, mesh_axes=("model",))
-    print("batched fft2d max err:",
-          float(np.max(np.abs(np.asarray(y2)
-                              - np.fft.fft2(x2, axes=(-2, -1))))))
-    y2_single = fft2d(jnp.asarray(x2[0]), mesh=mesh, mesh_axes=("model",))
-    print("unbatched fft2d max err:",
-          float(np.max(np.abs(np.asarray(y2_single) - np.fft.fft2(x2[0])))))
-
-    # --- autotuning: let the runtime pick the schedule (paper's thesis) -----
+    # --- autotuned plan: the runtime picks the schedule (paper's thesis) ----
     # "heuristic" ranks every valid (decomp, backend, n_chunks, axis-order)
-    # plan with the LogP/roofline model; "auto" also measures the top-k and
-    # persists the winner in ~/.cache/repro-fft/tuning.json (or
-    # $REPRO_TUNING_CACHE), so the search cost is paid once per problem key.
+    # plan with the calibrated LogP/roofline model; "auto" also measures the
+    # top-k and persists the winner in ~/.cache/repro-fft/tuning.json (or
+    # $REPRO_TUNING_CACHE), so later processes rehydrate it for free.
     import tempfile
 
-    from repro.core import TuningCache, tune
+    from repro.core import TuningCache
 
     cache = TuningCache(os.path.join(tempfile.mkdtemp(), "tuning.json"))
-    plan = tune((32, 32, 32), mesh, cache=cache)
-    print(f"tuned plan: {plan.decomp} over {plan.mesh_axes}, "
-          f"backend={plan.backend}, n_chunks={plan.n_chunks} "
-          f"({plan.measured_s * 1e3:.2f} ms vs default "
-          f"{plan.baseline_s * 1e3:.2f} ms)")
-    xk_tuned = fft3d(jnp.asarray(x), mesh=mesh, tuning="auto",
-                     tune_cache=cache)
+    tuned = plan_fft(mesh, (32, 32, 32), tuning="auto", tune_cache=cache)
+    print(tuned.describe())
+    xk_tuned = tuned(jnp.asarray(x))
     print("tuned vs default max diff:",
           float(np.max(np.abs(np.asarray(xk_tuned) - np.asarray(xk)))))
+
+    # --- legacy one-shot wrappers -------------------------------------------
+    # fftnd/fft3d/fft2d keep their historical signatures; they build (and
+    # memoize) the same plan objects under the hood, so occasional one-shot
+    # calls stay cheap too.
+    from repro.core import fft3d
+
+    yk_legacy = fft3d(jnp.asarray(x), mesh=mesh)
+    print("wrapper vs plan max diff:",
+          float(np.max(np.abs(np.asarray(yk_legacy) - np.asarray(xk)))))
+
+    # --- spectral Poisson solver on one paired plan -------------------------
+    from repro.core import PoissonSolver
+
+    solver = PoissonSolver(mesh, (32, 32, 32))
+    rhs = rng.standard_normal((32, 32, 32)).astype(np.float32)
+    rhs -= rhs.mean()
+    phi = solver(jnp.asarray(rhs))
+    print("Poisson solve output:", phi.shape, phi.dtype)
 
 
 if __name__ == "__main__":

@@ -2,35 +2,40 @@
 # stage-specific decompositions, pipelined redistribution, plan caching and
 # autotuned plan selection, plus the host-side dynamic task scheduler (work
 # stealing) it rides on.
-from .api import (fft2d, fft3d, fftnd, ifft2d, ifft3d, ifftnd,
-                  poisson_eigenvalues, poisson_solve)
+from .api import (DistributedFFT, PoissonSolver, fft2d, fft3d, fftnd,
+                  ifft2d, ifft3d, ifftnd, plan_fft, poisson_eigenvalues,
+                  poisson_solve)
 from .decomp import (Decomposition, Redistribution, StageLayout,
                      local_shape, make_decomposition, pencil, pencil_nd,
                      slab, slab_nd, validate_grid)
 from .perfmodel import (Machine, MachineProfile, calibrate,
                         predict_plan_time, profile_from_machine)
 from .pipeline import (PipelineSpec, build_pipeline, compile_pipeline,
-                       effective_grid, input_struct, make_spec)
+                       effective_grid, input_struct, make_spec,
+                       output_struct)
 from .plan import (GLOBAL_PLAN_CACHE, PlanCache, TunedPlan, TuningCache,
                    global_tuning_cache, plan_key, tuning_key)
 from .redistribute import redistribute, transpose_cost_bytes
 from .tuner import (Candidate, enumerate_candidates, measure_candidate,
-                    rank_candidates, resolve_profile, synth_input, tune)
+                    rank_candidates, resolve_profile, resolve_tuned_plan,
+                    synth_input, tune)
 from . import transforms
 
 __all__ = [
+    "DistributedFFT", "plan_fft", "PoissonSolver",
     "fft3d", "ifft3d", "fft2d", "ifft2d", "fftnd", "ifftnd",
     "poisson_solve", "poisson_eigenvalues",
     "Decomposition", "Redistribution", "StageLayout", "local_shape",
     "make_decomposition", "pencil", "pencil_nd", "slab", "slab_nd",
     "validate_grid",
     "PipelineSpec", "build_pipeline", "compile_pipeline", "effective_grid",
-    "input_struct", "make_spec",
+    "input_struct", "make_spec", "output_struct",
     "GLOBAL_PLAN_CACHE", "PlanCache", "plan_key",
     "TunedPlan", "TuningCache", "global_tuning_cache", "tuning_key",
     "Machine", "MachineProfile", "calibrate", "predict_plan_time",
     "profile_from_machine",
     "Candidate", "enumerate_candidates", "measure_candidate",
-    "rank_candidates", "resolve_profile", "synth_input", "tune",
+    "rank_candidates", "resolve_profile", "resolve_tuned_plan",
+    "synth_input", "tune",
     "redistribute", "transpose_cost_bytes", "transforms",
 ]

@@ -1,52 +1,64 @@
-"""User-facing DaggerFFT-style API.
+"""User-facing DaggerFFT-style API: first-class distributed FFT plans.
 
-Mirrors the paper's §V-A surface, generalized to N-D: call ``fftnd`` (or the
-``fft2d``/``fft3d`` conveniences) on the trailing ``ndim`` dims of an array —
-leading dims are treated as replicated batch dims — optionally choosing the
-decomposition ("pencil"/"slab"), transform kinds per dimension (C2C "fft",
-R2C "rfft" on the first dim, R2R "dct2"/"dst2"), backend and the overlap
-chunk count.  Plans (compiled executables) are cached transparently.
+Mirrors the paper's §V-A surface — "define the transform once, let the
+runtime own the schedule" — as an FFTW/AccFFT-style **plan handle**:
 
-**Autotuning** (the paper's thesis — the runtime picks the schedule): pass
-``tuning=`` instead of hand-picking the knobs:
+    plan = plan_fft(mesh, (64, 64, 64), kinds=("rfft", "fft", "fft"),
+                    tuning="auto")
+    yk = plan(x)                # forward (== plan.forward(x))
+    x2 = plan.inverse(yk)       # paired inverse, same schedule
+    print(plan.describe())      # decomp/backend/chunks + tuner evidence
 
-* ``tuning="off"``        (default) use the explicit ``decomp``/``backend``/
-  ``n_chunks`` arguments as given;
-* ``tuning="heuristic"``  rank every valid plan with the LogP/roofline perf
-  model and take the argmin — no timing runs, no disk;
-* ``tuning="auto"``       additionally *measure* the model's top-k surviving
-  plans with compiled-executable timings and persist the winner in a JSON
-  ``TuningCache`` (``~/.cache/repro-fft/tuning.json`` or
-  ``$REPRO_TUNING_CACHE``), so later processes skip the search entirely.
+Everything expensive happens **once, at plan time**: tuning (search +
+measurement), calibration, spec construction and executable compilation.
+A reused plan's ``.forward()``/``.inverse()`` does no tuning, no spec work
+and no plan-cache lookups per call — it holds its compiled executables
+directly.  Introspection comes along for free:
 
-**Calibration** (what makes the model trustworthy on *your* hardware): the
-perf model's machine constants are measured, not assumed.  The first
-``tuning="auto"`` call on a machine runs ``perfmodel.calibrate()`` — local
-FFT throughput per backend and per kind family, memory bandwidth, and
-per-mesh-axis ``all_to_all`` alpha/beta — and stores the resulting
-``MachineProfile`` in the wisdom file's ``"machine"`` section, keyed by
-platform; every later process (and every ``tuning="heuristic"`` call)
-loads it from there for free.  On a single device the network terms fall
-back to model defaults (``net_calibrated=False``).  Set
-``REPRO_CALIBRATE=off`` to skip calibration and prune with the built-in
-constants.  The model is kind-aware either way: R2C/R2R pipelines are
-priced on their actual stage costs and padded transpose volumes.
+* ``plan.in_sharding`` / ``plan.out_sharding`` — the stage-0 / final-stage
+  ``NamedSharding``; lay your producer out in ``in_sharding`` and pass
+  ``sharded_in=True`` to skip the entry ``device_put`` round trip entirely
+  (zero-copy sharded pipelines).  ``plan.forward(x, donate=True)`` further
+  donates the input buffer to the computation.
+* ``plan.in_struct`` / ``plan.out_struct`` — shape/dtype/sharding of the
+  forward input/output (R2C frequency padding included).
+* ``plan.describe()`` — chosen decomposition, backend, n_chunks, and the
+  tuner's predicted vs. measured times.
 
-Example (complex-to-complex, pencil decomposition):
+**Autotuning** (the paper's thesis): pass ``tuning=`` instead of
+hand-picking the knobs:
+
+* ``tuning="off"``        (default) use explicit ``decomp``/``backend``/
+  ``n_chunks`` as given;
+* ``tuning="heuristic"``  rank every valid plan with the calibrated
+  LogP/roofline perf model and take the argmin — no timing runs, no disk;
+* ``tuning="auto"``       additionally *measure* the model's top-k
+  surviving plans and persist the winner in the JSON wisdom cache
+  (``~/.cache/repro-fft/tuning.json`` or ``$REPRO_TUNING_CACHE``), so later
+  processes rehydrate the full plan description without searching.
+
+Passing explicit ``decomp``/``backend``/``n_chunks`` together with
+``tuning != "off"`` is deprecated (the tuner overrides them).
+
+**Legacy wrappers** ``fftnd``/``fft3d``/``fft2d``/``ifftnd``/... keep their
+historical call signatures; they are now thin shims that build (and
+memoize, per problem key) a ``DistributedFFT`` and delegate to it — one
+example:
 
     mesh = make_mesh((2, 2), ("data", "model"))
     xk = fft3d(x, mesh=mesh)                    # forward
     x2 = ifft3d(xk, mesh=mesh)                  # round-trip
 
-    yk = fft2d(y, mesh=mesh, mesh_axes=("model",))   # 2-D slab
-    zk = fftnd(z, mesh=mesh, ndim=3, tuning="auto")  # tuned batched 3-D
-
-``poisson_solve`` is the Oceananigans-style spectral Poisson solver built on
-top (benchmarked in fig8_poisson).
+``PoissonSolver`` (and its ``poisson_solve`` wrapper) is the
+Oceananigans-style spectral Poisson solver built on one paired plan:
+forward and inverse share a single tuning resolution and a cached
+eigenvalue array (benchmarked in fig8_poisson).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+import threading
+import warnings
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,10 +66,12 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 
 from .decomp import make_decomposition, validate_grid
-from .pipeline import PipelineSpec, build_pipeline, compile_pipeline, make_spec
-from .plan import TuningCache
+from .pipeline import (PipelineSpec, build_pipeline, compile_pipeline,
+                       input_struct, make_spec, output_struct)
+from .plan import TunedPlan, TuningCache
 
 _DEF_KINDS = ("fft", "fft", "fft")
+_R2R_KINDS = ("dct2", "dst2")
 TUNING_MODES = ("off", "heuristic", "auto")
 
 
@@ -78,54 +92,392 @@ def _default_fft_axes(mesh: Mesh, decomp: str, ndim: int) -> Tuple[str, ...]:
     return (names[-1],)
 
 
-def _resolve_plan(tuning: str, grid, mesh, kinds, dtype, inverse,
-                  batch_shape, decomp, backend, n_chunks, mesh_axes,
-                  tune_cache):
-    """Apply the tuning policy; returns (decomp, mesh_axes, backend, n_chunks)."""
-    if tuning not in TUNING_MODES:
-        raise ValueError(f"tuning must be one of {TUNING_MODES}, got {tuning!r}")
-    if tuning == "off":
-        return decomp, mesh_axes, backend, n_chunks
-    from .tuner import tune  # deferred: tuner imports pipeline machinery
-    plan = tune(grid, mesh, kinds=kinds, dtype=dtype, inverse=inverse,
-                batch_shape=batch_shape, mode=tuning, cache=tune_cache)
-    return plan.decomp, plan.mesh_axes, plan.backend, plan.n_chunks
+def _complex_for(dtype) -> jnp.dtype:
+    """The complex dtype matching ``dtype``'s precision (c128 under x64)."""
+    return jnp.dtype(jnp.result_type(jnp.dtype(dtype), jnp.complex64))
 
 
-def _make_pipeline_spec(grid, mesh: Mesh, decomp: str, kinds, backend: str,
-                        n_chunks: int, inverse: bool, mesh_axes,
-                        n_batch: int) -> PipelineSpec:
-    axes = tuple(mesh_axes) if mesh_axes else _default_fft_axes(
-        mesh, decomp, len(grid))
-    dec = make_decomposition(decomp, axes, len(grid))
-    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    spec = make_spec(mesh, tuple(grid), dec, tuple(kinds), backend=backend,
-                     n_chunks=n_chunks, inverse=inverse,
-                     batch_spec=(None,) * n_batch)
-    validate_grid(dec, spec.eff_grid, axis_sizes)
-    return spec
+def _real_for(dtype) -> jnp.dtype:
+    """The real dtype matching ``dtype``'s precision."""
+    dt = jnp.dtype(dtype)
+    if jnp.issubdtype(dt, jnp.complexfloating):
+        return jnp.dtype(jnp.finfo(dt).dtype)
+    return dt
 
 
-def _run(x: jax.Array, mesh: Mesh, spec: PipelineSpec, n_batch: int,
-         precompiled: bool) -> jax.Array:
-    if precompiled:
-        exe = compile_pipeline(mesh, spec, batch_shape=x.shape[:n_batch],
-                               dtype=x.dtype)
-        x = jax.device_put(x, NamedSharding(mesh, spec.in_spec()))
+def _forward_plan_dtype(x_dtype, kinds: Tuple[str, ...]) -> jnp.dtype:
+    """The plan input dtype implied by a forward operand's dtype.
+
+    R2C and R2R pipelines keep real input real; pure-C2C input is promoted
+    to the *matching* complex dtype — float64 becomes complex128 under x64,
+    never a silent complex64 downcast.
+    """
+    dt = jnp.dtype(x_dtype)
+    if kinds[0] == "rfft" or any(k in _R2R_KINDS for k in kinds):
+        return dt
+    if jnp.issubdtype(dt, jnp.complexfloating):
+        return dt
+    return _complex_for(dt)
+
+
+def _inverse_plan_dtype(y_dtype, kinds: Tuple[str, ...]) -> jnp.dtype:
+    """The *forward* plan dtype implied by a spectral operand's dtype.
+
+    ``ifftnd`` receives the forward output; the paired plan is keyed on the
+    forward input dtype, which real-input pipelines (rfft / any R2R kind)
+    take at the matching real precision.
+    """
+    dt = jnp.dtype(y_dtype)
+    if kinds[0] == "rfft" or any(k in _R2R_KINDS for k in kinds):
+        return _real_for(dt)
+    if jnp.issubdtype(dt, jnp.complexfloating):
+        return dt
+    return _complex_for(dt)
+
+
+class DistributedFFT:
+    """A reusable distributed FFT plan: plan once, execute many.
+
+    Owns the resolved schedule (decomposition, mesh axes, backend, chunk
+    count), the forward *and* inverse pipeline specs, the input/output
+    structs, and the compiled executables.  Construct via :func:`plan_fft`.
+
+    Execution never re-plans: ``forward``/``inverse`` cast the operand if
+    needed, lay it out in the stage-0 sharding (skipped with
+    ``sharded_in=True`` for operands already so laid out), and invoke the
+    held executable.
+    """
+
+    def __init__(self, mesh: Mesh, fwd_spec: PipelineSpec,
+                 inv_spec: PipelineSpec, *,
+                 batch_shape: Tuple[int, ...] = (), dtype=jnp.complex64,
+                 tuned: Optional[TunedPlan] = None, tuning: str = "off",
+                 precompiled: bool = True):
+        self.mesh = mesh
+        self._fwd_spec = fwd_spec
+        self._inv_spec = inv_spec
+        self.batch_shape = tuple(batch_shape)
+        self.tuned = tuned
+        self.tuning = tuning
+        self.precompiled = precompiled
+        self._in_struct = input_struct(mesh, fwd_spec, self.batch_shape,
+                                       dtype)
+        self._out_struct = output_struct(mesh, fwd_spec, self.batch_shape,
+                                         dtype)
+        self._inv_in_struct = input_struct(mesh, inv_spec, self.batch_shape,
+                                           self._out_struct.dtype)
+        self._inv_out_struct = output_struct(mesh, inv_spec,
+                                             self.batch_shape,
+                                             self._out_struct.dtype)
+        self._exe: Dict[Tuple[bool, bool], Any] = {}
+        self._jit: Dict[Tuple[bool, bool], Callable] = {}
+        self._build_lock = threading.Lock()
+        if precompiled:
+            # Planning pays the forward compile; the inverse compiles on
+            # first .inverse() so forward-only users don't pay it twice.
+            self._executable(inverse=False, donate=False)
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def grid(self) -> Tuple[int, ...]:
+        """Logical (pre-padding) spatial grid."""
+        return self._fwd_spec.grid
+
+    @property
+    def eff_grid(self) -> Tuple[int, ...]:
+        """The grid the pipeline actually moves (R2C frequency-padded)."""
+        return self._fwd_spec.eff_grid
+
+    @property
+    def kinds(self) -> Tuple[str, ...]:
+        return self._fwd_spec.kinds
+
+    @property
+    def decomp(self) -> str:
+        return self._fwd_spec.decomp.name
+
+    @property
+    def mesh_axes(self) -> Tuple[str, ...]:
+        return tuple(self._fwd_spec.decomp.mesh_axes)
+
+    @property
+    def backend(self) -> str:
+        return self._fwd_spec.backend
+
+    @property
+    def n_chunks(self) -> int:
+        return self._fwd_spec.n_chunks
+
+    @property
+    def dtype(self) -> jnp.dtype:
+        """Forward input dtype."""
+        return jnp.dtype(self._in_struct.dtype)
+
+    @property
+    def in_struct(self) -> jax.ShapeDtypeStruct:
+        """Shape/dtype/sharding of the forward input."""
+        return self._in_struct
+
+    @property
+    def out_struct(self) -> jax.ShapeDtypeStruct:
+        """Shape/dtype/sharding of the forward output."""
+        return self._out_struct
+
+    @property
+    def in_sharding(self) -> NamedSharding:
+        """Stage-0 sharding — lay inputs out like this for ``sharded_in``."""
+        return self._in_struct.sharding
+
+    @property
+    def out_sharding(self) -> NamedSharding:
+        """Final-stage sharding of the forward output."""
+        return self._out_struct.sharding
+
+    @property
+    def inv_in_struct(self) -> jax.ShapeDtypeStruct:
+        """Shape/dtype/sharding of the inverse input (== forward output)."""
+        return self._inv_in_struct
+
+    @property
+    def inv_out_struct(self) -> jax.ShapeDtypeStruct:
+        """Shape/dtype/sharding of the inverse output."""
+        return self._inv_out_struct
+
+    def describe(self) -> str:
+        """Multi-line report: schedule, layouts, and tuning evidence."""
+        mesh_geom = dict(zip(self.mesh.axis_names,
+                             self.mesh.devices.shape))
+        tuned_line = (self.tuned.describe() if self.tuned is not None
+                      else "untuned")
+        with self._build_lock:  # _executable may be inserting concurrently
+            exe_keys = list(self._exe)
+        compiled = sorted(
+            ("inverse" if inv else "forward") + (" (donating)" if don else "")
+            for inv, don in exe_keys)
+        lines = [
+            f"DistributedFFT(grid={self.grid}, kinds={self.kinds}, "
+            f"batch={self.batch_shape}, dtype={self.dtype.name})",
+            f"  mesh: {mesh_geom}",
+            f"  schedule: {self.decomp} over {self.mesh_axes}, "
+            f"backend={self.backend}, n_chunks={self.n_chunks} "
+            f"(tuning={self.tuning!r})",
+            f"  tuner: {tuned_line}",
+            f"  in:  {self._in_struct.shape} {self._in_struct.dtype} "
+            f"{self._fwd_spec.in_spec()}",
+            f"  out: {self._out_struct.shape} {self._out_struct.dtype} "
+            f"{self._fwd_spec.out_spec()}",
+            f"  compiled: [{', '.join(compiled) or 'none'}] "
+            f"(precompiled={self.precompiled})",
+        ]
+        return "\n".join(lines)
+
+    def __repr__(self) -> str:
+        return (f"DistributedFFT(grid={self.grid}, kinds={self.kinds}, "
+                f"decomp={self.decomp!r}, mesh_axes={self.mesh_axes}, "
+                f"backend={self.backend!r}, n_chunks={self.n_chunks})")
+
+    # -- execution ----------------------------------------------------------
+
+    def _executable(self, *, inverse: bool, donate: bool):
+        key = (inverse, donate)
+        exe = self._exe.get(key)
+        if exe is None:
+            with self._build_lock:
+                exe = self._exe.get(key)
+                if exe is None:
+                    spec = self._inv_spec if inverse else self._fwd_spec
+                    struct = (self._inv_in_struct if inverse
+                              else self._in_struct)
+                    exe = compile_pipeline(self.mesh, spec,
+                                           batch_shape=self.batch_shape,
+                                           dtype=struct.dtype, donate=donate)
+                    self._exe[key] = exe
+        return exe
+
+    def _jitted(self, *, inverse: bool, donate: bool) -> Callable:
+        key = (inverse, donate)
+        fn = self._jit.get(key)
+        if fn is None:
+            with self._build_lock:
+                fn = self._jit.get(key)
+                if fn is None:
+                    spec = self._inv_spec if inverse else self._fwd_spec
+                    fn = jax.jit(build_pipeline(self.mesh, spec),
+                                 donate_argnums=(0,) if donate else ())
+                    self._jit[key] = fn
+        return fn
+
+    def _execute(self, x: jax.Array, *, inverse: bool, sharded_in: bool,
+                 donate: bool) -> jax.Array:
+        struct = self._inv_in_struct if inverse else self._in_struct
+        if tuple(x.shape) != tuple(struct.shape):
+            raise ValueError(
+                f"{'inverse' if inverse else 'forward'} operand has shape "
+                f"{tuple(x.shape)}, plan expects {tuple(struct.shape)} "
+                f"(batch={self.batch_shape}, grid={self.grid})")
+        if x.dtype != struct.dtype:
+            x = x.astype(struct.dtype)
+        if not self.precompiled:
+            return self._jitted(inverse=inverse, donate=donate)(x)
+        exe = self._executable(inverse=inverse, donate=donate)
+        if not sharded_in:
+            x = jax.device_put(x, struct.sharding)
         return exe(x)
-    return jax.jit(build_pipeline(mesh, spec))(x)
+
+    def forward(self, x: jax.Array, *, sharded_in: bool = False,
+                donate: bool = False) -> jax.Array:
+        """Forward transform.  ``sharded_in=True`` trusts ``x`` to already
+        carry ``self.in_sharding`` and skips the entry ``device_put``;
+        ``donate=True`` donates the input buffer to the computation."""
+        return self._execute(x, inverse=False, sharded_in=sharded_in,
+                             donate=donate)
+
+    def inverse(self, y: jax.Array, *, sharded_in: bool = False,
+                donate: bool = False) -> jax.Array:
+        """Inverse transform.  A forward output is already laid out in the
+        inverse input sharding, so ``plan.inverse(plan.forward(x),
+        sharded_in=True)`` round-trips with zero redundant copies."""
+        return self._execute(y, inverse=True, sharded_in=sharded_in,
+                             donate=donate)
+
+    def __call__(self, x: jax.Array, **kw) -> jax.Array:
+        return self.forward(x, **kw)
+
+
+def plan_fft(mesh: Mesh, grid: Sequence[int], *,
+             kinds: Optional[Sequence[str]] = None,
+             batch_shape: Sequence[int] = (), dtype=None,
+             decomp: Optional[str] = None, backend: Optional[str] = None,
+             n_chunks: Optional[int] = None,
+             mesh_axes: Optional[Sequence[str]] = None, tuning: str = "off",
+             tune_cache: Optional[TuningCache] = None,
+             precompiled: bool = True) -> DistributedFFT:
+    """Build a :class:`DistributedFFT` plan for the trailing ``len(grid)``
+    dims of ``batch_shape + grid``-shaped operands.
+
+    All planning work — tuning policy resolution, spec construction,
+    validation and (with ``precompiled=True``) forward compilation — happens
+    here, once.  ``dtype`` is the forward *input* dtype and defaults to
+    complex64 for pure-C2C kinds and float32 for R2C/R2R pipelines.
+    """
+    grid = tuple(int(n) for n in grid)
+    ndim = len(grid)
+    if ndim < 2:
+        raise ValueError("plan_fft needs >= 2 transform dims "
+                         "(use jnp.fft.fft)")
+    kinds = tuple(kinds) if kinds is not None else ("fft",) * ndim
+    if len(kinds) != ndim:
+        raise ValueError(f"plan_fft: {len(kinds)} kinds for ndim={ndim}")
+    if tuning not in TUNING_MODES:
+        raise ValueError(f"tuning must be one of {TUNING_MODES}, "
+                         f"got {tuning!r}")
+    batch_shape = tuple(int(n) for n in batch_shape)
+    if dtype is None:
+        dtype = (jnp.float32 if kinds[0] == "rfft"
+                 or any(k in _R2R_KINDS for k in kinds) else jnp.complex64)
+
+    explicit = [name for name, val in (("decomp", decomp),
+                                       ("backend", backend),
+                                       ("n_chunks", n_chunks))
+                if val is not None]
+    if tuning != "off" and explicit:
+        warnings.warn(
+            f"explicit {'/'.join(explicit)} are overridden by "
+            f"tuning={tuning!r} (the tuner owns the schedule); pass "
+            "tuning='off' to force them", DeprecationWarning, stacklevel=3)
+    decomp = decomp if decomp is not None else "pencil"
+    backend = backend if backend is not None else "xla"
+    n_chunks = n_chunks if n_chunks is not None else 1
+
+    from .tuner import Candidate, resolve_tuned_plan  # deferred: heavy deps
+    default = None
+    if tuning == "off":
+        axes = (tuple(mesh_axes) if mesh_axes
+                else _default_fft_axes(mesh, decomp, ndim))
+        default = Candidate(decomp=decomp, mesh_axes=axes, backend=backend,
+                            n_chunks=n_chunks)
+    tuned = resolve_tuned_plan(grid, mesh, kinds=kinds, dtype=dtype,
+                               inverse=False, batch_shape=batch_shape,
+                               mode=tuning, cache=tune_cache,
+                               default=default)
+
+    dec = make_decomposition(tuned.decomp, tuned.mesh_axes, ndim)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_spec = (None,) * len(batch_shape)
+    fwd_spec = make_spec(mesh, grid, dec, kinds, backend=tuned.backend,
+                         n_chunks=tuned.n_chunks, inverse=False,
+                         batch_spec=batch_spec)
+    validate_grid(dec, fwd_spec.eff_grid, axis_sizes)
+    inv_spec = make_spec(mesh, grid, dec, kinds, backend=tuned.backend,
+                         n_chunks=tuned.n_chunks, inverse=True,
+                         batch_spec=batch_spec)
+    return DistributedFFT(mesh, fwd_spec, inv_spec, batch_shape=batch_shape,
+                          dtype=dtype, tuned=tuned, tuning=tuning,
+                          precompiled=precompiled)
+
+
+# ---------------------------------------------------------------------------
+# Legacy wrappers: thin, plan-memoizing shims over the plan API.
+# ---------------------------------------------------------------------------
+
+_PLAN_MEMO: Dict[Any, Any] = {}
+_PLAN_MEMO_LOCK = threading.Lock()
+
+
+def _memoized(key: Any, factory: Callable[[], Any]) -> Any:
+    with _PLAN_MEMO_LOCK:
+        obj = _PLAN_MEMO.get(key)
+    if obj is not None:
+        return obj
+    obj = factory()
+    with _PLAN_MEMO_LOCK:
+        # Another thread may have raced us; keep the first instance so every
+        # caller shares one set of compiled executables.
+        return _PLAN_MEMO.setdefault(key, obj)
+
+
+def clear_plan_memo() -> None:
+    """Drop the wrappers' memoized plan/solver objects (tests)."""
+    with _PLAN_MEMO_LOCK:
+        _PLAN_MEMO.clear()
+
+
+def plan_memo_stats() -> Dict[str, int]:
+    with _PLAN_MEMO_LOCK:
+        return {"plans": len(_PLAN_MEMO)}
+
+
+def _wrapper_plan(mesh: Mesh, grid, kinds, batch_shape, dtype, decomp,
+                  backend, n_chunks, mesh_axes, tuning, tune_cache,
+                  precompiled) -> DistributedFFT:
+    # The cache object itself is part of the key: TuningCache hashes by
+    # identity, and holding the reference keeps its id from being recycled
+    # onto a different cache while the memoized plan exists.
+    key = ("fft", mesh, tuple(grid), tuple(kinds), tuple(batch_shape),
+           str(jnp.dtype(dtype)), decomp, backend, n_chunks,
+           tuple(mesh_axes) if mesh_axes is not None else None, tuning,
+           tune_cache, precompiled)
+    return _memoized(key, lambda: plan_fft(
+        mesh, grid, kinds=kinds, batch_shape=batch_shape, dtype=dtype,
+        decomp=decomp, backend=backend, n_chunks=n_chunks,
+        mesh_axes=mesh_axes, tuning=tuning, tune_cache=tune_cache,
+        precompiled=precompiled))
 
 
 def fftnd(x: jax.Array, *, mesh: Mesh, ndim: Optional[int] = None,
-          decomp: str = "pencil", kinds: Optional[Sequence[str]] = None,
-          backend: str = "xla", n_chunks: int = 1,
+          decomp: Optional[str] = None,
+          kinds: Optional[Sequence[str]] = None,
+          backend: Optional[str] = None, n_chunks: Optional[int] = None,
           mesh_axes: Optional[Sequence[str]] = None, tuning: str = "off",
           tune_cache: Optional[TuningCache] = None,
           precompiled: bool = True) -> jax.Array:
     """Distributed forward N-D transform of the trailing ``ndim`` dims of x.
 
     Leading ``x.ndim - ndim`` dims are batch dims (replicated across the
-    mesh).  ``ndim`` defaults to ``x.ndim`` (transform everything).
+    mesh).  ``ndim`` defaults to ``x.ndim`` (transform everything).  Thin
+    wrapper: builds (and memoizes) a :func:`plan_fft` plan and delegates —
+    hold a plan yourself for execute-many workloads.
     """
     ndim = x.ndim if ndim is None else ndim
     if ndim < 2:
@@ -136,45 +488,43 @@ def fftnd(x: jax.Array, *, mesh: Mesh, ndim: Optional[int] = None,
     if len(kinds) != ndim:
         raise ValueError(f"fftnd: {len(kinds)} kinds for ndim={ndim}")
     n_batch = x.ndim - ndim
-    grid = tuple(x.shape[n_batch:])
-    if kinds[0] != "rfft" and not jnp.iscomplexobj(x) \
-            and not any(k in ("dct2", "dst2") for k in kinds):
-        x = x.astype(jnp.complex64)
-    decomp, mesh_axes, backend, n_chunks = _resolve_plan(
-        tuning, grid, mesh, kinds, x.dtype, False, x.shape[:n_batch],
-        decomp, backend, n_chunks, mesh_axes, tune_cache)
-    spec = _make_pipeline_spec(grid, mesh, decomp, kinds, backend, n_chunks,
-                               False, mesh_axes, n_batch)
-    return _run(x, mesh, spec, n_batch, precompiled)
+    plan = _wrapper_plan(mesh, x.shape[n_batch:], kinds, x.shape[:n_batch],
+                         _forward_plan_dtype(x.dtype, kinds), decomp,
+                         backend, n_chunks, mesh_axes, tuning, tune_cache,
+                         precompiled)
+    return plan.forward(x)
 
 
 def ifftnd(x: jax.Array, *, mesh: Mesh, ndim: Optional[int] = None,
-           grid: Optional[Tuple[int, ...]] = None, decomp: str = "pencil",
-           kinds: Optional[Sequence[str]] = None, backend: str = "xla",
-           n_chunks: int = 1, mesh_axes: Optional[Sequence[str]] = None,
-           tuning: str = "off", tune_cache: Optional[TuningCache] = None,
+           grid: Optional[Tuple[int, ...]] = None,
+           decomp: Optional[str] = None,
+           kinds: Optional[Sequence[str]] = None,
+           backend: Optional[str] = None, n_chunks: Optional[int] = None,
+           mesh_axes: Optional[Sequence[str]] = None, tuning: str = "off",
+           tune_cache: Optional[TuningCache] = None,
            precompiled: bool = True) -> jax.Array:
     """Inverse of ``fftnd``.  ``kinds`` are the FORWARD kinds.
 
     For R2C pipelines pass ``grid`` = the original real-space grid (the
-    frequency dim of ``x`` is padded, so it cannot be inferred).
+    frequency dim of ``x`` is padded, so it cannot be inferred).  Delegates
+    to the same memoized plan the forward wrapper uses.
     """
     ndim = (x.ndim if grid is None else len(grid)) if ndim is None else ndim
     if ndim < 2:
-        raise ValueError("ifftnd needs >= 2 transform dims (use jnp.fft.ifft)")
+        raise ValueError("ifftnd needs >= 2 transform dims "
+                         "(use jnp.fft.ifft)")
     if x.ndim < ndim:
         raise ValueError(f"ifftnd: ndim={ndim} but input has {x.ndim} dims")
-    n_batch = x.ndim - ndim
     kinds = tuple(kinds) if kinds is not None else ("fft",) * ndim
     if len(kinds) != ndim:
         raise ValueError(f"ifftnd: {len(kinds)} kinds for ndim={ndim}")
+    n_batch = x.ndim - ndim
     logical = tuple(grid) if grid is not None else tuple(x.shape[n_batch:])
-    decomp, mesh_axes, backend, n_chunks = _resolve_plan(
-        tuning, logical, mesh, kinds, x.dtype, True, x.shape[:n_batch],
-        decomp, backend, n_chunks, mesh_axes, tune_cache)
-    spec = _make_pipeline_spec(logical, mesh, decomp, kinds, backend,
-                               n_chunks, True, mesh_axes, n_batch)
-    return _run(x, mesh, spec, n_batch, precompiled)
+    plan = _wrapper_plan(mesh, logical, kinds, x.shape[:n_batch],
+                         _inverse_plan_dtype(x.dtype, kinds), decomp,
+                         backend, n_chunks, mesh_axes, tuning, tune_cache,
+                         precompiled)
+    return plan.inverse(x)
 
 
 def fft2d(x: jax.Array, *, mesh: Mesh, **kw) -> jax.Array:
@@ -187,34 +537,26 @@ def ifft2d(x: jax.Array, *, mesh: Mesh, **kw) -> jax.Array:
     return ifftnd(x, mesh=mesh, ndim=2, **kw)
 
 
-def fft3d(x: jax.Array, *, mesh: Mesh, decomp: str = "pencil",
-          kinds: Sequence[str] = _DEF_KINDS, backend: str = "xla",
-          n_chunks: int = 1, mesh_axes: Optional[Sequence[str]] = None,
-          tuning: str = "off", tune_cache: Optional[TuningCache] = None,
-          precompiled: bool = True) -> jax.Array:
+def fft3d(x: jax.Array, *, mesh: Mesh, kinds: Sequence[str] = _DEF_KINDS,
+          **kw) -> jax.Array:
     """Distributed forward 3D transform of the trailing three dims of x."""
-    return fftnd(x, mesh=mesh, ndim=3, decomp=decomp, kinds=kinds,
-                 backend=backend, n_chunks=n_chunks, mesh_axes=mesh_axes,
-                 tuning=tuning, tune_cache=tune_cache,
-                 precompiled=precompiled)
+    return fftnd(x, mesh=mesh, ndim=3, kinds=kinds, **kw)
 
 
-def ifft3d(x: jax.Array, *, mesh: Mesh, grid: Optional[Tuple[int, int, int]] = None,
-           decomp: str = "pencil", kinds: Sequence[str] = _DEF_KINDS,
-           backend: str = "xla", n_chunks: int = 1,
-           mesh_axes: Optional[Sequence[str]] = None, tuning: str = "off",
-           tune_cache: Optional[TuningCache] = None,
-           precompiled: bool = True) -> jax.Array:
+def ifft3d(x: jax.Array, *, mesh: Mesh,
+           grid: Optional[Tuple[int, int, int]] = None,
+           kinds: Sequence[str] = _DEF_KINDS, **kw) -> jax.Array:
     """Inverse of ``fft3d``.  ``kinds`` are the FORWARD kinds.
 
     For R2C pipelines pass ``grid`` = the original real-space grid (the
     frequency dim of ``x`` is padded, so it cannot be inferred).
     """
-    return ifftnd(x, mesh=mesh, ndim=3, grid=grid, decomp=decomp,
-                  kinds=kinds, backend=backend, n_chunks=n_chunks,
-                  mesh_axes=mesh_axes, tuning=tuning, tune_cache=tune_cache,
-                  precompiled=precompiled)
+    return ifftnd(x, mesh=mesh, ndim=3, grid=grid, kinds=kinds, **kw)
 
+
+# ---------------------------------------------------------------------------
+# Spectral Poisson solver (Oceananigans-style), on one paired plan.
+# ---------------------------------------------------------------------------
 
 def poisson_eigenvalues(n: int, length: float = 2 * np.pi,
                         topology: str = "periodic") -> np.ndarray:
@@ -227,47 +569,113 @@ def poisson_eigenvalues(n: int, length: float = 2 * np.pi,
     return (2.0 * (np.cos(np.pi * i / n) - 1.0)) / dx**2
 
 
+class PoissonSolver:
+    """Spectral solver for lap(phi) = rhs on a (Periodic|Bounded)^3 box.
+
+    Periodic dims use C2C FFTs; Bounded dims use DCT-II (homogeneous
+    Neumann), matching the Oceananigans pressure-solver topologies in paper
+    Fig. 8.  One :class:`DistributedFFT` plan serves both directions — a
+    single tuning resolution per topology, not two tuner hits per call —
+    and the eigenvalue array is computed once and cached per spectral
+    dtype.  ``solve`` accepts ``sharded_in=``/``donate=`` like the plan it
+    wraps; the spectral scale-and-inverse runs on the forward output's
+    native sharding.
+    """
+
+    def __init__(self, mesh: Mesh, grid: Sequence[int], *,
+                 topology: Tuple[str, str, str] = ("periodic",) * 3,
+                 lengths: Tuple[float, ...] = (2 * np.pi,) * 3,
+                 batch_shape: Sequence[int] = (), dtype=jnp.float32,
+                 decomp: Optional[str] = None,
+                 backend: Optional[str] = None,
+                 n_chunks: Optional[int] = None,
+                 mesh_axes: Optional[Sequence[str]] = None,
+                 tuning: str = "off",
+                 tune_cache: Optional[TuningCache] = None,
+                 precompiled: bool = True):
+        grid = tuple(int(n) for n in grid)
+        if len(grid) != 3:
+            raise ValueError(f"PoissonSolver needs a 3-D grid, got {grid}")
+        self.topology = tuple(topology)
+        self.lengths = tuple(lengths)
+        kinds = tuple("fft" if t == "periodic" else "dct2"
+                      for t in self.topology)
+        self.plan = plan_fft(mesh, grid, kinds=kinds,
+                             batch_shape=batch_shape,
+                             dtype=_forward_plan_dtype(dtype, kinds),
+                             decomp=decomp, backend=backend,
+                             n_chunks=n_chunks, mesh_axes=mesh_axes,
+                             tuning=tuning, tune_cache=tune_cache,
+                             precompiled=precompiled)
+        lams = [poisson_eigenvalues(n, l, t)
+                for n, l, t in zip(grid, self.lengths, self.topology)]
+        lam = (lams[0][:, None, None] + lams[1][None, :, None]
+               + lams[2][None, None, :])
+        lam_flat = lam.reshape(-1)
+        lam_flat[0] = 1.0  # pin the null mode (mean) to zero
+        self._lam = lam_flat.reshape(lam.shape)
+        self._lam_dev: Dict[str, jax.Array] = {}
+
+    def _lam_for(self, dtype) -> jax.Array:
+        key = str(jnp.dtype(dtype))
+        lam = self._lam_dev.get(key)
+        if lam is None:
+            lam = jnp.asarray(self._lam, dtype=dtype)
+            self._lam_dev[key] = lam
+        return lam
+
+    def describe(self) -> str:
+        topo = "x".join(t[0].upper() for t in self.topology)
+        return f"PoissonSolver(topology={topo})\n{self.plan.describe()}"
+
+    def solve(self, rhs: jax.Array, *, sharded_in: bool = False,
+              donate: bool = False) -> jax.Array:
+        """One pressure solve; the null (mean) mode is zeroed per batch
+        element and real input comes back real."""
+        real_in = not jnp.iscomplexobj(rhs)
+        xk = self.plan.forward(rhs, sharded_in=sharded_in, donate=donate)
+        scaled = xk / self._lam_for(xk.dtype)
+        # Zero the null (mean) mode explicitly — indexing only the trailing
+        # 3 spectral dims so every leading batch element is zeroed, not
+        # just batch index 0.
+        scaled = scaled.at[..., 0, 0, 0].set(jnp.zeros((), scaled.dtype))
+        phi = self.plan.inverse(scaled)
+        if real_in and jnp.iscomplexobj(phi):
+            phi = jnp.real(phi)
+        return phi
+
+    def __call__(self, rhs: jax.Array, **kw) -> jax.Array:
+        return self.solve(rhs, **kw)
+
+
 def poisson_solve(rhs: jax.Array, *, mesh: Mesh,
                   topology: Tuple[str, str, str] = ("periodic",) * 3,
                   lengths: Tuple[float, ...] = (2 * np.pi,) * 3,
-                  decomp: str = "pencil", backend: str = "xla",
-                  n_chunks: int = 1,
+                  decomp: Optional[str] = None,
+                  backend: Optional[str] = None,
+                  n_chunks: Optional[int] = None,
                   mesh_axes: Optional[Sequence[str]] = None,
                   tuning: str = "off",
-                  tune_cache: Optional[TuningCache] = None) -> jax.Array:
-    """Solve lap(phi) = rhs spectrally on a (Periodic|Bounded)^3 box.
+                  tune_cache: Optional[TuningCache] = None,
+                  precompiled: bool = True) -> jax.Array:
+    """Solve lap(phi) = rhs spectrally; thin wrapper over PoissonSolver.
 
-    Periodic dims use C2C FFTs; Bounded dims use DCT-II (homogeneous Neumann),
-    matching the Oceananigans pressure-solver topologies in paper Fig. 8.
-    Leading dims of ``rhs`` beyond the trailing 3 are batch dims; the null
-    (mean) mode is zeroed per batch element.  ``mesh_axes`` and
-    ``tune_cache`` are forwarded to the underlying transforms, so tuned
-    solves share wisdom with (and warm plans for) direct ``fft3d`` callers.
+    Leading dims of ``rhs`` beyond the trailing 3 are batch dims.  Builds
+    (and memoizes, per topology/geometry) a :class:`PoissonSolver`, so
+    repeated solves share one paired plan and one eigenvalue array; hold a
+    solver yourself to also use ``sharded_in=``/``donate=``.
     """
-    grid = rhs.shape[-3:]
+    grid = tuple(rhs.shape[-3:])
+    batch_shape = tuple(rhs.shape[:-3])
     kinds = tuple("fft" if t == "periodic" else "dct2" for t in topology)
-    xk = fft3d(rhs.astype(jnp.complex64) if "fft" in kinds else rhs,
-               mesh=mesh, decomp=decomp, kinds=kinds, backend=backend,
-               n_chunks=n_chunks, mesh_axes=mesh_axes, tuning=tuning,
-               tune_cache=tune_cache)
-    lams = [
-        poisson_eigenvalues(n, l, t)
-        for n, l, t in zip(grid, lengths, topology)
-    ]
-    lam = (lams[0][:, None, None] + lams[1][None, :, None]
-           + lams[2][None, None, :])
-    lam_flat = lam.reshape(-1)
-    lam_flat[0] = 1.0  # pin the null mode (mean) to zero
-    lam = lam_flat.reshape(lam.shape)
-    scaled = xk / jnp.asarray(lam, dtype=xk.dtype)
-    # Zero the null (mean) mode explicitly — indexing only the trailing 3
-    # spectral dims so every leading batch element is zeroed, not just
-    # batch index 0.
-    zero = jnp.zeros((), scaled.dtype)
-    scaled = scaled.at[..., 0, 0, 0].set(zero)
-    phi = ifft3d(scaled, mesh=mesh, grid=grid, decomp=decomp, kinds=kinds,
-                 backend=backend, n_chunks=n_chunks, mesh_axes=mesh_axes,
-                 tuning=tuning, tune_cache=tune_cache)
-    if not jnp.iscomplexobj(rhs):
-        phi = jnp.real(phi)
-    return phi
+    dtype = _forward_plan_dtype(rhs.dtype, kinds)
+    key = ("poisson", mesh, grid, tuple(topology), tuple(lengths),
+           batch_shape, str(jnp.dtype(dtype)), decomp, backend, n_chunks,
+           tuple(mesh_axes) if mesh_axes is not None else None, tuning,
+           tune_cache, precompiled)
+    solver = _memoized(key, lambda: PoissonSolver(
+        mesh, grid, topology=topology, lengths=lengths,
+        batch_shape=batch_shape, dtype=dtype, decomp=decomp,
+        backend=backend, n_chunks=n_chunks, mesh_axes=mesh_axes,
+        tuning=tuning, tune_cache=tune_cache, precompiled=precompiled))
+    return solver.solve(rhs)

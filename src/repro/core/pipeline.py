@@ -179,17 +179,43 @@ def input_struct(mesh: Mesh, spec: PipelineSpec,
     must synthesize a correctly-sharded input for each candidate plan).
     """
     in_grid = spec.eff_grid if spec.inverse else spec.grid
-    if not spec.inverse and spec.kinds[0] == "rfft":
-        dtype = jnp.float32
+    if not spec.inverse and spec.kinds[0] == "rfft" \
+            and jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating):
+        # R2C pipelines take real input; match the precision of the complex
+        # dtype the caller asked for (complex128 -> float64 under x64).
+        dtype = (jnp.float64 if jnp.dtype(dtype) == jnp.dtype(jnp.complex128)
+                 else jnp.float32)
     shape = tuple(batch_shape) + tuple(in_grid)
     return jax.ShapeDtypeStruct(
         shape, dtype, sharding=NamedSharding(mesh, spec.in_spec()))
 
 
+def output_struct(mesh: Mesh, spec: PipelineSpec,
+                  batch_shape: Tuple[int, ...] = (),
+                  dtype=jnp.complex64) -> jax.ShapeDtypeStruct:
+    """Shape/dtype/sharding of the pipeline's output array.
+
+    Derived by abstract evaluation so R2C padding / irfft trimming and every
+    kind's dtype behaviour (e.g. real-in/real-out DCT pipelines) are priced
+    by the pipeline itself rather than re-derived here.  Powers the plan
+    API's ``out_struct``/``out_sharding`` introspection.
+    """
+    arg = input_struct(mesh, spec, batch_shape, dtype)
+    out = jax.eval_shape(build_pipeline(mesh, spec), arg)
+    return jax.ShapeDtypeStruct(
+        out.shape, out.dtype, sharding=NamedSharding(mesh, spec.out_spec()))
+
+
 def compile_pipeline(mesh: Mesh, spec: PipelineSpec,
                      batch_shape: Tuple[int, ...] = (),
-                     dtype=jnp.complex64, *, use_cache: bool = True):
-    """Lower+compile the pipeline once and cache it (paper's plan cache)."""
+                     dtype=jnp.complex64, *, use_cache: bool = True,
+                     donate: bool = False):
+    """Lower+compile the pipeline once and cache it (paper's plan cache).
+
+    ``donate=True`` compiles a variant that donates the input buffer to the
+    computation (zero-copy execute-many pipelines); it is part of the plan
+    key, so donating and non-donating callers never share an executable.
+    """
     arg = input_struct(mesh, spec, batch_shape, dtype)
     dtype = arg.dtype
 
@@ -200,10 +226,12 @@ def compile_pipeline(mesh: Mesh, spec: PipelineSpec,
                    mesh_shape=tuple(mesh.devices.shape),
                    mesh_axes=tuple(mesh.axis_names), backend=spec.backend,
                    n_chunks=spec.n_chunks, inverse=spec.inverse,
-                   extra=batch_shape)
+                   extra=(tuple(batch_shape), bool(donate)))
 
     def builder():
-        return jax.jit(build_pipeline(mesh, spec)).lower(arg).compile()
+        donate_argnums = (0,) if donate else ()
+        return jax.jit(build_pipeline(mesh, spec),
+                       donate_argnums=donate_argnums).lower(arg).compile()
 
     if not use_cache:
         return builder()

@@ -122,6 +122,23 @@ class TunedPlan:
                    baseline_s=float(d.get("baseline_s", 0.0)),
                    ts=float(d.get("ts", 0.0)))
 
+    def describe(self) -> str:
+        """One-line human-readable account of this decision and its timings.
+
+        Rehydrated wisdom entries report the same predicted/measured numbers
+        they were persisted with, so a ``DistributedFFT.describe()`` built
+        from a cache hit shows the original tuning evidence.
+        """
+        head = (f"{self.decomp}({','.join(self.mesh_axes)})/{self.backend}"
+                f"/chunks={self.n_chunks}")
+        if self.source == "measured":
+            return (f"{head} [measured {self.measured_s * 1e3:.3f} ms, "
+                    f"predicted {self.predicted_s * 1e3:.3f} ms, "
+                    f"default baseline {self.baseline_s * 1e3:.3f} ms]")
+        if self.source == "heuristic":
+            return f"{head} [predicted {self.predicted_s * 1e3:.3f} ms]"
+        return f"{head} [static default, untuned]"
+
 
 def tuning_key(*, grid: Sequence[int], mesh_shape: Sequence[int],
                mesh_axes: Sequence[str], kinds: Sequence[str], dtype: str,

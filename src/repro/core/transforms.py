@@ -178,7 +178,10 @@ def _dct2(x: jax.Array, axis: int, backend: str) -> jax.Array:
     xm, ax = _move_last(x, axis)
     n = xm.shape[-1]
     v = jnp.concatenate([xm[..., 0::2], xm[..., 1::2][..., ::-1]], axis=-1)
-    vf = _c2c(v.astype(jnp.complex64), -1, inverse=False, backend=backend)
+    # Promote to the complex dtype MATCHING the input precision: float64
+    # pipelines (x64) must not round-trip through complex64.
+    vf = _c2c(v.astype(jnp.result_type(v.dtype, jnp.complex64)), -1,
+              inverse=False, backend=backend)
     k = jnp.arange(n)
     phase = jnp.exp(-1j * jnp.pi * k / (2.0 * n)).astype(vf.dtype)
     out = 2.0 * jnp.real(phase * vf)

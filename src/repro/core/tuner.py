@@ -321,6 +321,33 @@ def _default_candidate(cands: Sequence[Candidate]) -> Optional[Candidate]:
     return cands[0] if cands else None
 
 
+def resolve_tuned_plan(grid: Sequence[int], mesh: Mesh, *,
+                       kinds: Optional[Sequence[str]] = None,
+                       dtype=jnp.complex64, inverse: bool = False,
+                       batch_shape: Sequence[int] = (), mode: str = "off",
+                       cache: Optional[TuningCache] = None,
+                       default: Optional[Candidate] = None) -> TunedPlan:
+    """One :class:`TunedPlan` per tuning policy — the plan API's entry point.
+
+    ``mode="off"`` wraps the caller's explicit ``default`` candidate in a
+    ``source="default"`` plan (no search, no disk); ``"heuristic"``/``"auto"``
+    delegate to :func:`tune`.  Returning a ``TunedPlan`` in every mode lets
+    ``DistributedFFT`` carry a uniform record of *why* its schedule was
+    chosen (``TunedPlan.describe()``), whether it came from the wisdom
+    cache, a measurement run, or the static defaults.
+    """
+    if mode == "off":
+        if default is None:
+            raise ValueError("resolve_tuned_plan(mode='off') needs a "
+                             "default Candidate")
+        return TunedPlan(decomp=default.decomp,
+                         mesh_axes=tuple(default.mesh_axes),
+                         backend=default.backend, n_chunks=default.n_chunks,
+                         predicted_s=0.0, measured_s=0.0, source="default")
+    return tune(grid, mesh, kinds=kinds, dtype=dtype, inverse=inverse,
+                batch_shape=batch_shape, mode=mode, cache=cache)
+
+
 def tune(grid: Sequence[int], mesh: Mesh, *,
          kinds: Optional[Sequence[str]] = None, dtype=jnp.complex64,
          inverse: bool = False, batch_shape: Sequence[int] = (),

@@ -1,0 +1,313 @@
+"""First-class ``DistributedFFT`` plan objects: plan-once/execute-many.
+
+Covers the plan API redesign's acceptance criteria: wrappers delegate to
+plans (bit-identical results), a reused plan performs no tuning / spec /
+plan-cache work per call, ``sharded_in=True`` round-trips from a
+pre-sharded input, precision-preserving dtype promotion (float64 ->
+complex128 under x64), the ``PoissonSolver`` pairing, and the deprecation
+of explicit knobs under tuning.
+
+Mesh-dependent paths run in subprocesses on a fake 8-device (2x4) mesh
+(see tests/README.md); introspection and warning checks run in-process on
+the session's single CPU device.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+
+COMMON = """
+import os, numpy as np, jax, jax.numpy as jnp
+from repro.compat import AxisType, make_mesh
+mesh = make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+from repro.core import (DistributedFFT, GLOBAL_PLAN_CACHE, PoissonSolver,
+                        TuningCache, fft3d, ifft3d, plan_fft, poisson_solve)
+rng = np.random.default_rng(0)
+x = (rng.standard_normal((8, 8, 16)) + 1j*rng.standard_normal((8, 8, 16))).astype(np.complex64)
+ref = np.fft.fftn(x)
+"""
+
+
+# ---------------------------------------------------------------------------
+# In-process: introspection, dtype policy, deprecation
+# ---------------------------------------------------------------------------
+
+def test_plan_introspection(cpu_mesh):
+    from jax.sharding import NamedSharding
+
+    from repro.core import plan_fft
+    plan = plan_fft(cpu_mesh, (16, 8, 8), kinds=("rfft", "fft", "fft"),
+                    batch_shape=(3,), precompiled=False)
+    assert plan.grid == (16, 8, 8)
+    assert plan.eff_grid[0] == 9          # 16//2+1, no padding on 1-dev mesh
+    assert plan.kinds == ("rfft", "fft", "fft")
+    assert plan.batch_shape == (3,)
+    assert plan.in_struct.shape == (3, 16, 8, 8)
+    assert str(plan.in_struct.dtype) == "float32"   # R2C takes real input
+    assert plan.out_struct.shape == (3, 9, 8, 8)
+    assert str(plan.out_struct.dtype) == "complex64"
+    assert plan.inv_in_struct.shape == plan.out_struct.shape
+    assert plan.inv_out_struct.shape == plan.in_struct.shape
+    assert str(plan.inv_out_struct.dtype) == "float32"  # irfft is real-out
+    assert isinstance(plan.in_sharding, NamedSharding)
+    assert isinstance(plan.out_sharding, NamedSharding)
+    rep = plan.describe()
+    for token in ("pencil", "xla", "n_chunks=1", "rfft", "static default"):
+        assert token in rep, rep
+
+
+def test_plan_fft_validates_arguments(cpu_mesh):
+    from repro.core import plan_fft
+    with pytest.raises(ValueError, match="2 transform dims"):
+        plan_fft(cpu_mesh, (16,))
+    with pytest.raises(ValueError, match="kinds"):
+        plan_fft(cpu_mesh, (8, 8), kinds=("fft",))
+    with pytest.raises(ValueError, match="tuning"):
+        plan_fft(cpu_mesh, (8, 8), tuning="bogus")
+
+
+def test_plan_rejects_wrong_shape(cpu_mesh):
+    import jax.numpy as jnp
+
+    from repro.core import plan_fft
+    plan = plan_fft(cpu_mesh, (8, 8), precompiled=False)
+    with pytest.raises(ValueError, match="plan expects"):
+        plan.forward(jnp.zeros((4, 4), jnp.complex64))
+
+
+def test_forward_dtype_promotion_matches_precision():
+    """Satellite: real input promotes to the MATCHING complex dtype — no
+    silent float64 -> complex64 downcast."""
+    import jax.numpy as jnp
+
+    from repro.core.api import _forward_plan_dtype, _inverse_plan_dtype
+    c2c = ("fft", "fft")
+    assert _forward_plan_dtype(np.float32, c2c) == jnp.dtype(jnp.complex64)
+    assert _forward_plan_dtype(np.complex64, c2c) == jnp.dtype(jnp.complex64)
+    # R2C / R2R pipelines keep real input real.
+    assert _forward_plan_dtype(np.float32, ("rfft", "fft")) == \
+        jnp.dtype(jnp.float32)
+    assert _forward_plan_dtype(np.float32, ("fft", "dct2")) == \
+        jnp.dtype(jnp.float32)
+    # Inverse wrappers key the paired plan on the forward input dtype.
+    assert _inverse_plan_dtype(np.complex64, ("rfft", "fft")) == \
+        jnp.dtype(jnp.float32)
+    assert _inverse_plan_dtype(np.complex64, c2c) == jnp.dtype(jnp.complex64)
+
+
+def test_explicit_knobs_under_tuning_deprecated(cpu_mesh):
+    """Satellite: decomp/backend/n_chunks are silently overridden by the
+    tuner — passing them with tuning != 'off' now warns (once, naming every
+    offending knob)."""
+    import jax.numpy as jnp
+
+    from repro.core import TuningCache, fftnd
+    x = jnp.asarray((np.random.default_rng(0).standard_normal((8, 8))
+                     + 0j).astype(np.complex64))
+    with pytest.warns(DeprecationWarning, match="decomp/n_chunks"):
+        fftnd(x, mesh=cpu_mesh, decomp="slab", n_chunks=1,
+              mesh_axes=("model",), tuning="heuristic",
+              tune_cache=TuningCache(None))
+
+
+def test_no_deprecation_warning_when_tuning_off(cpu_mesh):
+    import jax.numpy as jnp
+
+    from repro.core import fftnd
+    x = jnp.asarray((np.random.default_rng(0).standard_normal((8, 8))
+                     + 0j).astype(np.complex64))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        fftnd(x, mesh=cpu_mesh, decomp="pencil", n_chunks=1, tuning="off")
+    assert not [w for w in caught
+                if issubclass(w.category, DeprecationWarning)]
+
+
+# ---------------------------------------------------------------------------
+# Subprocess (8-device mesh): reuse, sharded-in, wrapper parity
+# ---------------------------------------------------------------------------
+
+def test_plan_reuse_hits_no_caches():
+    """Acceptance: a reused plan's second .forward() does no plan-cache or
+    tuner-cache work at all — the executable is held by the plan."""
+    out = run_subprocess(COMMON + """
+cache = TuningCache(None)
+plan = plan_fft(mesh, (8, 8, 16), tuning="heuristic", tune_cache=cache)
+y1 = plan.forward(jnp.asarray(x))
+jax.block_until_ready(y1)
+s_plan = GLOBAL_PLAN_CACHE.stats()
+s_tune = cache.stats()
+y2 = plan.forward(jnp.asarray(x))
+jax.block_until_ready(y2)
+print("plan_cache_stable", int(GLOBAL_PLAN_CACHE.stats() == s_plan))
+print("tuner_cache_stable", int(cache.stats() == s_tune))
+print("identical", int(np.array_equal(np.asarray(y1), np.asarray(y2))))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert vals["plan_cache_stable"] == "1"
+    assert vals["tuner_cache_stable"] == "1"
+    assert vals["identical"] == "1"
+
+
+def test_wrapper_bit_identical_to_plan_api():
+    """Acceptance: fft3d/ifft3d are thin shims over the same plan — results
+    are bit-identical, and repeated wrapper calls reuse one memoized plan."""
+    out = run_subprocess(COMMON + """
+from repro.core.api import plan_memo_stats
+plan = plan_fft(mesh, (8, 8, 16))
+y_plan = plan(jnp.asarray(x))
+y_wrap = fft3d(jnp.asarray(x), mesh=mesh)
+print("fwd_identical", int(np.array_equal(np.asarray(y_plan),
+                                          np.asarray(y_wrap))))
+x_plan = plan.inverse(y_plan)
+x_wrap = ifft3d(y_wrap, mesh=mesh)
+print("inv_identical", int(np.array_equal(np.asarray(x_plan),
+                                          np.asarray(x_wrap))))
+n1 = plan_memo_stats()["plans"]
+fft3d(jnp.asarray(x), mesh=mesh)
+ifft3d(y_wrap, mesh=mesh)
+print("memo_stable", int(plan_memo_stats()["plans"] == n1))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert vals["fwd_identical"] == "1"
+    assert vals["inv_identical"] == "1"
+    assert vals["memo_stable"] == "1"
+
+
+def test_sharded_in_roundtrip():
+    """Acceptance: sharded_in=True accepts an input already laid out in the
+    stage-0 sharding, produces identical results, and chains zero-copy into
+    the inverse (forward out sharding == inverse in sharding)."""
+    out = run_subprocess(COMMON + """
+plan = plan_fft(mesh, (8, 8, 16))
+xs = jax.device_put(jnp.asarray(x), plan.in_sharding)
+print("presharded", int(xs.sharding == plan.in_sharding))
+y0 = plan.forward(jnp.asarray(x))
+y1 = plan.forward(xs, sharded_in=True)
+print("identical", int(np.array_equal(np.asarray(y0), np.asarray(y1))))
+print("out_equiv", int(y1.sharding.is_equivalent_to(plan.out_sharding,
+                                                    y1.ndim)))
+xb = plan.inverse(y1, sharded_in=True)
+print("rt", float(np.max(np.abs(np.asarray(xb) - x))))
+print("fwd", float(np.max(np.abs(np.asarray(y1) - ref)) / np.max(np.abs(ref))))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert vals["presharded"] == "1"
+    assert vals["identical"] == "1"
+    assert vals["out_equiv"] == "1"
+    assert float(vals["rt"]) < 1e-5
+    assert float(vals["fwd"]) < 1e-5
+
+
+def test_donate_execution_matches():
+    out = run_subprocess(COMMON + """
+plan = plan_fft(mesh, (8, 8, 16))
+y0 = np.asarray(plan.forward(jnp.asarray(x)))
+xd = jax.device_put(jnp.asarray(x), plan.in_sharding)
+y1 = np.asarray(plan.forward(xd, sharded_in=True, donate=True))
+print("identical", int(np.array_equal(y0, y1)))
+""")
+    assert out.split()[-1] == "1"
+
+
+def test_precompiled_false_jit_path():
+    out = run_subprocess(COMMON + """
+plan = plan_fft(mesh, (8, 8, 16), precompiled=False)
+y = plan(jnp.asarray(x))
+print("fwd", float(np.max(np.abs(np.asarray(y) - ref)) / np.max(np.abs(ref))))
+s = GLOBAL_PLAN_CACHE.stats()
+print("no_plan_cache_use", int(s["plans"] == 0))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert float(vals["fwd"]) < 1e-5
+    assert vals["no_plan_cache_use"] == "1"
+
+
+def test_float64_precision_preserved_under_x64():
+    """Satellite: float64 input must ride a complex128 pipeline end to end
+    (the old auto-cast forced complex64 and silently halved precision)."""
+    out = run_subprocess("""
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from repro.compat import AxisType, make_mesh
+mesh = make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+from repro.core import fftnd, poisson_solve
+rng = np.random.default_rng(0)
+xr = rng.standard_normal((8, 8, 16))            # float64
+y = fftnd(jnp.asarray(xr), mesh=mesh)
+print("dtype", y.dtype)
+ref = np.fft.fftn(xr)
+print("err", float(np.max(np.abs(np.asarray(y) - ref)) / np.max(np.abs(ref))))
+rhs = rng.standard_normal((16, 16, 16)); rhs -= rhs.mean()
+phi = poisson_solve(jnp.asarray(rhs), mesh=mesh)
+print("phidtype", phi.dtype)
+dx = 2*np.pi/16
+p = np.asarray(phi)
+lap = (sum(np.roll(p, s, a) for a in range(3) for s in (1, -1)) - 6*p)/dx**2
+print("res", float(np.max(np.abs(lap - rhs)) / np.max(np.abs(rhs))))
+# R2R stages must also run at double precision (a complex64 round trip
+# inside dct2 would cap the roundtrip error at ~1e-7):
+from repro.core import ifftnd
+xd = rng.standard_normal((8, 8, 8))
+kk = ("fft", "fft", "dct2")
+yd = fftnd(jnp.asarray(xd), mesh=mesh, kinds=kk)
+xdb = ifftnd(yd, mesh=mesh, kinds=kk)
+print("dctrt", float(np.max(np.abs(np.real(np.asarray(xdb)) - xd))))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert vals["dtype"] == "complex128"
+    assert float(vals["err"]) < 1e-12          # double precision, not single
+    assert vals["phidtype"] == "float64"
+    assert float(vals["res"]) < 1e-10
+    assert float(vals["dctrt"]) < 1e-12        # dct2 stayed in complex128
+
+
+def test_poisson_solver_single_resolution_and_reuse():
+    """PoissonSolver: one paired plan per topology (forward+inverse share a
+    single tuning resolution), cached eigenvalues, reusable across solves
+    with no per-call planning."""
+    out = run_subprocess(COMMON + """
+n = 16
+rhs = rng.standard_normal((n, n, n)).astype(np.float32); rhs -= rhs.mean()
+solver = PoissonSolver(mesh, (n, n, n))
+phi1 = solver(jnp.asarray(rhs))
+jax.block_until_ready(phi1)
+s = GLOBAL_PLAN_CACHE.stats()
+phi2 = solver(jnp.asarray(rhs))
+jax.block_until_ready(phi2)
+print("cache_stable", int(GLOBAL_PLAN_CACHE.stats() == s))
+print("identical", int(np.array_equal(np.asarray(phi1), np.asarray(phi2))))
+dx = 2*np.pi/n
+p = np.asarray(phi1)
+lap = (sum(np.roll(p, s, a) for a in range(3) for s in (1, -1)) - 6*p)/dx**2
+print("res", float(np.max(np.abs(lap - rhs)) / np.max(np.abs(rhs))))
+print("describe_ok", int("PoissonSolver" in solver.describe()))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert vals["cache_stable"] == "1"
+    assert vals["identical"] == "1"
+    assert float(vals["res"]) < 1e-4
+    assert vals["describe_ok"] == "1"
+
+
+def test_poisson_solve_forwards_precompiled():
+    """Satellite: precompiled= is no longer silently dropped — the False
+    path must bypass the compiled-plan cache entirely."""
+    out = run_subprocess(COMMON + """
+n = 16
+rhs = rng.standard_normal((n, n, n)).astype(np.float32); rhs -= rhs.mean()
+phi_pre = poisson_solve(jnp.asarray(rhs), mesh=mesh, precompiled=True)
+n_plans = GLOBAL_PLAN_CACHE.stats()["plans"]
+print("compiled_plans", int(n_plans >= 1))
+GLOBAL_PLAN_CACHE.clear()
+phi_jit = poisson_solve(jnp.asarray(rhs), mesh=mesh, precompiled=False)
+print("jit_no_cache", int(GLOBAL_PLAN_CACHE.stats()["plans"] == 0))
+print("diff", float(np.max(np.abs(np.asarray(phi_pre) - np.asarray(phi_jit)))))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert vals["compiled_plans"] == "1"
+    assert vals["jit_no_cache"] == "1"
+    assert float(vals["diff"]) < 1e-5
