@@ -1,5 +1,6 @@
 """Autotuner benchmark: static default vs tuned plan, per shape — plus a
-calibrated-vs-default cost-model comparison.
+pencil/slab/best-hybrid face-off on a 4-D grid and a calibrated-vs-default
+cost-model comparison.
 
 For each (grid, mesh) problem the tuner enumerates the full plan space,
 prunes with the LogP/roofline model and measures the top-k survivors; this
@@ -73,9 +74,35 @@ def run() -> None:
         emit(f"tuner_default_{label}", plan.baseline_s * 1e6)
         emit(f"tuner_winner_{label}", plan.measured_s * 1e6, won)
 
-    # Block 2: does calibration improve the pruning model's ranking?
-    # Block 1's tune() calls already calibrated and stored the profile in
-    # `cache`; resolve it rather than re-running the microbenchmarks.
+    # Block 2: the decomposition families head-to-head on a 4-D grid — the
+    # >3-D case the ROADMAP left open.  A pencil needs ndim-1 = 3 mesh
+    # axes, so on 2-axis meshes only slab and hybrid exist; each family's
+    # model-best candidate is measured, so the row shows what the hybrid
+    # search space buys (or costs) over the textbook layouts.
+    grid4 = (4, 4, 8, 8)
+    kinds4 = ("fft",) * 4
+    label4 = "x".join(map(str, grid4))
+    prof4 = resolve_profile(cache, mesh=mesh, allow_calibrate=False)
+    cands4 = enumerate_candidates(grid4, mesh, kinds4)
+    best_by_family = {}
+    for pred, cand in rank_candidates(cands4, grid4, mesh, prof4,
+                                      kinds=kinds4):
+        best_by_family.setdefault(cand.decomp, (pred, cand))
+    for family in ("pencil", "slab", "hybrid"):
+        if family not in best_by_family:
+            emit(f"tuner4d_{family}_{label4}", 0.0,
+                 "infeasible on this mesh")
+            continue
+        pred, cand = best_by_family[family]
+        t = measure_candidate(cand, grid4, mesh, kinds4,
+                              jax.numpy.complex64)
+        emit(f"tuner4d_{family}_{label4}", t * 1e6,
+             f"pred={pred * 1e6:.0f}us {cand.describe()}")
+
+    # Block 3: does calibration improve the pruning model's ranking?
+    # Blocks 1-2's tune()/resolve calls already calibrated and stored the
+    # profile in `cache`; resolve it rather than re-running the
+    # microbenchmarks.
     default_prof = profile_from_machine(default_machine())
     calib_prof = resolve_profile(cache, mesh=mesh)
     if not calib_prof.calibrated:

@@ -5,9 +5,10 @@
 from .api import (DistributedFFT, PoissonSolver, fft2d, fft3d, fftnd,
                   ifft2d, ifft3d, ifftnd, plan_fft, poisson_eigenvalues,
                   poisson_solve)
-from .decomp import (Decomposition, Redistribution, StageLayout,
-                     local_shape, make_decomposition, pencil, pencil_nd,
-                     slab, slab_nd, validate_grid)
+from .decomp import (Decomposition, RedistHop, Redistribution, StageLayout,
+                     default_dim_groups, hybrid_nd, local_shape,
+                     make_decomposition, pencil, pencil_nd, slab, slab_nd,
+                     validate_grid)
 from .perfmodel import (Machine, MachineProfile, calibrate,
                         predict_plan_time, profile_from_machine)
 from .pipeline import (PipelineSpec, build_pipeline, compile_pipeline,
@@ -15,7 +16,7 @@ from .pipeline import (PipelineSpec, build_pipeline, compile_pipeline,
                        output_struct)
 from .plan import (GLOBAL_PLAN_CACHE, PlanCache, TunedPlan, TuningCache,
                    global_tuning_cache, plan_key, tuning_key)
-from .redistribute import redistribute, transpose_cost_bytes
+from .redistribute import free_chunk_dim, redistribute, transpose_cost_bytes
 from .tuner import (Candidate, enumerate_candidates, measure_candidate,
                     rank_candidates, resolve_profile, resolve_tuned_plan,
                     synth_input, tune)
@@ -25,7 +26,8 @@ __all__ = [
     "DistributedFFT", "plan_fft", "PoissonSolver",
     "fft3d", "ifft3d", "fft2d", "ifft2d", "fftnd", "ifftnd",
     "poisson_solve", "poisson_eigenvalues",
-    "Decomposition", "Redistribution", "StageLayout", "local_shape",
+    "Decomposition", "RedistHop", "Redistribution", "StageLayout",
+    "default_dim_groups", "hybrid_nd", "local_shape",
     "make_decomposition", "pencil", "pencil_nd", "slab", "slab_nd",
     "validate_grid",
     "PipelineSpec", "build_pipeline", "compile_pipeline", "effective_grid",
@@ -37,5 +39,5 @@ __all__ = [
     "Candidate", "enumerate_candidates", "measure_candidate",
     "rank_candidates", "resolve_profile", "resolve_tuned_plan",
     "synth_input", "tune",
-    "redistribute", "transpose_cost_bytes", "transforms",
+    "free_chunk_dim", "redistribute", "transpose_cost_bytes", "transforms",
 ]

@@ -58,6 +58,7 @@ from __future__ import annotations
 
 import threading
 import warnings
+from collections import OrderedDict
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -65,10 +66,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding
 
-from .decomp import make_decomposition, validate_grid
+from .decomp import describe_decomp, make_decomposition, validate_grid
 from .pipeline import (PipelineSpec, build_pipeline, compile_pipeline,
                        input_struct, make_spec, output_struct)
-from .plan import TunedPlan, TuningCache
+from .plan import TunedPlan, TuningCache, env_capacity
 
 _DEF_KINDS = ("fft", "fft", "fft")
 _R2R_KINDS = ("dct2", "dst2")
@@ -76,7 +77,7 @@ TUNING_MODES = ("off", "heuristic", "auto")
 
 
 def _default_fft_axes(mesh: Mesh, decomp: str, ndim: int) -> Tuple[str, ...]:
-    """Pick mesh axes for the pencil/slab process grid."""
+    """Pick mesh axes for the pencil/slab/hybrid process grid."""
     names = tuple(mesh.axis_names)
     if decomp == "pencil":
         need = ndim - 1
@@ -85,8 +86,16 @@ def _default_fft_axes(mesh: Mesh, decomp: str, ndim: int) -> Tuple[str, ...]:
             return ("data", "model")
         if len(names) < need:
             raise ValueError(
-                f"pencil decomposition of {ndim} dims needs a >={need}D mesh")
+                f"pencil decomposition of {ndim} dims needs a >={need}D "
+                f"mesh (consider decomp='hybrid')")
         return names[-need:]
+    if decomp == "hybrid":
+        # Hybrids put the whole axis pool in play — that is their point on
+        # meshes too small for a pencil (ndim >= 4 on 2-axis meshes).
+        if {"data", "model"}.issubset(names):
+            extra = tuple(n for n in names if n not in ("data", "model"))
+            return ("data", "model") + extra
+        return names
     if "model" in names:
         return ("model",)
     return (names[-1],)
@@ -255,12 +264,21 @@ class DistributedFFT:
         compiled = sorted(
             ("inverse" if inv else "forward") + (" (donating)" if don else "")
             for inv, don in exe_keys)
+        decomp = describe_decomp(self.decomp,
+                                 self._fwd_spec.decomp.dim_groups)
+        chunks = str(self.n_chunks)
+        if self._fwd_spec.chunk_clamped:
+            chunks += (f" (clamped from "
+                       f"{self._fwd_spec.n_chunks_requested})")
+        if self._inv_spec.n_chunks != self._fwd_spec.n_chunks:
+            # e.g. a chunked slab whose inverse has no legal chunk dim
+            chunks += f", inverse={self._inv_spec.n_chunks}"
         lines = [
             f"DistributedFFT(grid={self.grid}, kinds={self.kinds}, "
             f"batch={self.batch_shape}, dtype={self.dtype.name})",
             f"  mesh: {mesh_geom}",
-            f"  schedule: {self.decomp} over {self.mesh_axes}, "
-            f"backend={self.backend}, n_chunks={self.n_chunks} "
+            f"  schedule: {decomp} over {self.mesh_axes}, "
+            f"backend={self.backend}, n_chunks={chunks} "
             f"(tuning={self.tuning!r})",
             f"  tuner: {tuned_line}",
             f"  in:  {self._in_struct.shape} {self._in_struct.dtype} "
@@ -350,7 +368,9 @@ def plan_fft(mesh: Mesh, grid: Sequence[int], *,
              batch_shape: Sequence[int] = (), dtype=None,
              decomp: Optional[str] = None, backend: Optional[str] = None,
              n_chunks: Optional[int] = None,
-             mesh_axes: Optional[Sequence[str]] = None, tuning: str = "off",
+             mesh_axes: Optional[Sequence[str]] = None,
+             dim_groups: Optional[Sequence[Sequence[int]]] = None,
+             tuning: str = "off",
              tune_cache: Optional[TuningCache] = None,
              precompiled: bool = True) -> DistributedFFT:
     """Build a :class:`DistributedFFT` plan for the trailing ``len(grid)``
@@ -360,6 +380,13 @@ def plan_fft(mesh: Mesh, grid: Sequence[int], *,
     validation and (with ``precompiled=True``) forward compilation — happens
     here, once.  ``dtype`` is the forward *input* dtype and defaults to
     complex64 for pure-C2C kinds and float32 for R2C/R2R pipelines.
+
+    ``decomp`` may be "pencil", "slab" or "hybrid" (the pencil-over-k-axes
+    family: contiguous stage groups of dims, optionally given explicitly as
+    ``dim_groups``, over any number of mesh axes).  When unset, it defaults
+    to "pencil" on meshes with enough axes and to "hybrid" otherwise — a
+    4-D grid on a 2-axis mesh plans out of the box as two 2-dim slab
+    stages with one transpose, where a pencil would demand 3 axes.
     """
     grid = tuple(int(n) for n in grid)
     ndim = len(grid)
@@ -379,16 +406,28 @@ def plan_fft(mesh: Mesh, grid: Sequence[int], *,
 
     explicit = [name for name, val in (("decomp", decomp),
                                        ("backend", backend),
-                                       ("n_chunks", n_chunks))
+                                       ("n_chunks", n_chunks),
+                                       ("dim_groups", dim_groups))
                 if val is not None]
     if tuning != "off" and explicit:
         warnings.warn(
             f"explicit {'/'.join(explicit)} are overridden by "
             f"tuning={tuning!r} (the tuner owns the schedule); pass "
             "tuning='off' to force them", DeprecationWarning, stacklevel=3)
-    decomp = decomp if decomp is not None else "pencil"
+    if decomp is None:
+        # dim_groups unambiguously means hybrid; otherwise pencil when the
+        # mesh has its ndim-1 axes, hybrid on smaller meshes.
+        if dim_groups is not None:
+            decomp = "hybrid"
+        else:
+            decomp = ("pencil" if len(mesh.axis_names) >= ndim - 1
+                      else "hybrid")
     backend = backend if backend is not None else "xla"
     n_chunks = n_chunks if n_chunks is not None else 1
+    if dim_groups is not None:
+        dim_groups = tuple(tuple(int(d) for d in g) for g in dim_groups)
+        if decomp != "hybrid":
+            raise ValueError("dim_groups only applies to decomp='hybrid'")
 
     from .tuner import Candidate, resolve_tuned_plan  # deferred: heavy deps
     default = None
@@ -396,13 +435,14 @@ def plan_fft(mesh: Mesh, grid: Sequence[int], *,
         axes = (tuple(mesh_axes) if mesh_axes
                 else _default_fft_axes(mesh, decomp, ndim))
         default = Candidate(decomp=decomp, mesh_axes=axes, backend=backend,
-                            n_chunks=n_chunks)
+                            n_chunks=n_chunks, dim_groups=dim_groups)
     tuned = resolve_tuned_plan(grid, mesh, kinds=kinds, dtype=dtype,
                                inverse=False, batch_shape=batch_shape,
                                mode=tuning, cache=tune_cache,
                                default=default)
 
-    dec = make_decomposition(tuned.decomp, tuned.mesh_axes, ndim)
+    dec = make_decomposition(tuned.decomp, tuned.mesh_axes, ndim,
+                             dim_groups=tuned.dim_groups)
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     batch_spec = (None,) * len(batch_shape)
     fwd_spec = make_spec(mesh, grid, dec, kinds, backend=tuned.backend,
@@ -421,20 +461,39 @@ def plan_fft(mesh: Mesh, grid: Sequence[int], *,
 # Legacy wrappers: thin, plan-memoizing shims over the plan API.
 # ---------------------------------------------------------------------------
 
-_PLAN_MEMO: Dict[Any, Any] = {}
+# LRU-bounded: a long-running serving process sweeping many (grid, mesh,
+# dtype) keys must not grow plan handles — and the compiled executables
+# they hold — without bound.  Eviction drops our reference only; plans a
+# caller still holds stay alive.  The compiled-executable layer underneath
+# (``plan.PlanCache``) carries its own LRU bound, so eviction here really
+# does release memory once no caller references the plan.  Sized by
+# $REPRO_PLAN_MEMO_SIZE (default 64).
+
+
+def _plan_memo_capacity() -> int:
+    return env_capacity("REPRO_PLAN_MEMO_SIZE", 64)
+
+
+_PLAN_MEMO: "OrderedDict[Any, Any]" = OrderedDict()
 _PLAN_MEMO_LOCK = threading.Lock()
 
 
 def _memoized(key: Any, factory: Callable[[], Any]) -> Any:
     with _PLAN_MEMO_LOCK:
         obj = _PLAN_MEMO.get(key)
-    if obj is not None:
-        return obj
+        if obj is not None:
+            _PLAN_MEMO.move_to_end(key)
+            return obj
     obj = factory()
     with _PLAN_MEMO_LOCK:
         # Another thread may have raced us; keep the first instance so every
         # caller shares one set of compiled executables.
-        return _PLAN_MEMO.setdefault(key, obj)
+        won = _PLAN_MEMO.setdefault(key, obj)
+        _PLAN_MEMO.move_to_end(key)
+        cap = _plan_memo_capacity()
+        while len(_PLAN_MEMO) > cap:
+            _PLAN_MEMO.popitem(last=False)
+        return won
 
 
 def clear_plan_memo() -> None:
@@ -445,7 +504,8 @@ def clear_plan_memo() -> None:
 
 def plan_memo_stats() -> Dict[str, int]:
     with _PLAN_MEMO_LOCK:
-        return {"plans": len(_PLAN_MEMO)}
+        return {"plans": len(_PLAN_MEMO),
+                "capacity": _plan_memo_capacity()}
 
 
 def _wrapper_plan(mesh: Mesh, grid, kinds, batch_shape, dtype, decomp,

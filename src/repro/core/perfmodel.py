@@ -16,7 +16,7 @@ import time
 from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
 
 from .decomp import Decomposition, local_shape
-from .redistribute import transpose_cost_bytes
+from .redistribute import hop_move_shapes, transpose_cost_bytes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -197,14 +197,15 @@ def predict_fft_time(grid: Tuple[int, int, int], decomp: Decomposition,
 
     t_comm = 0.0
     n_msgs = 0.0
-    for stage, redist in zip(decomp.stages, decomp.redists):
-        shape = local_shape(stage, grid, axis_sizes)
-        peers = axis_sizes[redist.mesh_axis]
-        vol = transpose_cost_bytes(shape, dtype_bytes, peers)
-        # Eq. 1: alpha * |S| + beta * m, per chunk round
-        t_comm += (machine.net_alpha_s * (peers - 1) * n_chunks
-                   + vol / machine.net_bw)
-        n_msgs += (peers - 1) * n_chunks
+    for stage, hop in zip(decomp.stages, decomp.redists):
+        start = local_shape(stage, grid, axis_sizes)
+        for mv, shape in hop_move_shapes(hop, start, axis_sizes):
+            peers = axis_sizes[mv.mesh_axis]
+            vol = transpose_cost_bytes(shape, dtype_bytes, peers)
+            # Eq. 1: alpha * |S| + beta * m, per chunk round
+            t_comm += (machine.net_alpha_s * (peers - 1) * n_chunks
+                       + vol / machine.net_bw)
+            n_msgs += (peers - 1) * n_chunks
 
     bulk = t_comp + t_comm
     overlapped = max(t_comp, t_comm)
@@ -328,13 +329,17 @@ def predict_plan_time(grid: Tuple[int, ...], decomp: Decomposition,
 
     t_comm = 0.0
     n_msgs = 0.0
-    for stage, redist in zip(decomp.stages, decomp.redists):
-        shape = local_shape(stage, eff, axis_sizes)
-        peers = axis_sizes[redist.mesh_axis]
-        vol = transpose_cost_bytes(shape, dtype_bytes, peers)
-        t_comm += (prof.alpha_for(redist.mesh_axis) * (peers - 1) * n_chunks
-                   + vol / prof.bw_for(redist.mesh_axis))
-        n_msgs += (peers - 1) * n_chunks
+    for stage, hop in zip(decomp.stages, decomp.redists):
+        # A hybrid hop chains several all_to_alls whose operand shapes
+        # thread into each other; price each move on the block it actually
+        # ships rather than assuming the single-move pencil/slab shape.
+        start = local_shape(stage, eff, axis_sizes)
+        for mv, shape in hop_move_shapes(hop, start, axis_sizes):
+            peers = axis_sizes[mv.mesh_axis]
+            vol = transpose_cost_bytes(shape, dtype_bytes, peers)
+            t_comm += (prof.alpha_for(mv.mesh_axis) * (peers - 1) * n_chunks
+                       + vol / prof.bw_for(mv.mesh_axis))
+            n_msgs += (peers - 1) * n_chunks
 
     overlap = max(prof.overlap, chunk_overlap_fraction(n_chunks))
     bulk = t_comp + t_comm

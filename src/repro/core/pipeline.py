@@ -17,8 +17,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from functools import partial
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,9 +27,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
 from . import transforms
-from .decomp import Decomposition, Redistribution, StageLayout, local_shape
+from .decomp import (Decomposition, StageLayout, axis_product, local_shape)
 from .plan import GLOBAL_PLAN_CACHE, plan_key
-from .redistribute import redistribute
+from .redistribute import (free_chunk_dim, largest_divisor_at_most,
+                           redistribute)
 
 INVERSE_KIND = {"fft": "ifft", "rfft": "irfft", "dct2": "dct3", "dst2": "dst3"}
 # Unnormalized R2R pairs satisfy inv(fwd(x)) = 2N x; complex pairs are
@@ -46,23 +48,26 @@ class PipelineSpec:
     n_chunks: int
     inverse: bool
     batch_spec: Tuple[Optional[str], ...]  # shardings of leading batch dims
+    n_chunks_requested: int = 0         # pre-clamp ask (0 = same as n_chunks)
 
     @property
     def spatial_offset(self) -> int:
         return len(self.batch_spec)
+
+    @property
+    def chunk_clamped(self) -> bool:
+        """True when the requested chunk count was clamped at spec time."""
+        return (self.n_chunks_requested != 0
+                and self.n_chunks_requested != self.n_chunks)
 
     def stage_order(self):
         stages = list(self.decomp.stages)
         redists = list(self.decomp.redists)
         if not self.inverse:
             return stages, redists
-        stages = stages[::-1]
-        redists = [
-            Redistribution(mesh_axis=r.mesh_axis, split_dim=r.concat_dim,
-                           concat_dim=r.split_dim)
-            for r in redists[::-1]
-        ]
-        return stages, redists
+        # Reversing a hop reverses its moves LIFO with split/concat swapped,
+        # so every intermediate layout is undone in the opposite order.
+        return stages[::-1], [hop.inverse() for hop in redists[::-1]]
 
     def in_spec(self) -> P:
         stages, _ = self.stage_order()
@@ -74,12 +79,18 @@ class PipelineSpec:
 
 
 def _freq_pad_target(decomp: Decomposition, axis_sizes: dict, nfreq: int) -> int:
-    """Pad the R2C frequency dim (dim 0) so all later shardings divide it."""
+    """Pad the R2C frequency dim (dim 0) so all later shardings divide it.
+
+    Hybrid stages may shard dim 0 over *several* mesh axes at once (a small
+    group absorbing a large axis pool), so the per-stage divisor is the
+    product of the sharding axes' sizes; mid-hop layouts only ever hold a
+    prefix of that tuple, whose product divides the full one.
+    """
     divisor = 1
     for stage in decomp.stages[1:]:
-        ax = stage.spec[0]
-        if ax is not None:
-            divisor = math.lcm(divisor, axis_sizes[ax])
+        size = axis_product(stage.spec[0], axis_sizes)
+        if size > 1:
+            divisor = math.lcm(divisor, size)
     return ((nfreq + divisor - 1) // divisor) * divisor
 
 
@@ -101,16 +112,80 @@ def effective_grid(grid: Tuple[int, ...], decomp: Decomposition,
     return tuple(eff)
 
 
+def chunk_sites(spec: "PipelineSpec", axis_sizes: dict
+                ) -> List[Tuple[Optional[int], Optional[int]]]:
+    """Per hop: the (absolute chunk dim, its local size) chunking would use.
+
+    ``(None, None)`` means the hop has no legal chunk dim (bulk only);
+    ``(d, None)`` means the chunk dim is a leading batch dim whose extent
+    the spec does not know.  Shared by the spec-time chunk clamp and the
+    tuner's feasibility filter so both agree with what ``redistribute``
+    will actually do.
+    """
+    offset = spec.spatial_offset
+    ndim_total = offset + len(spec.eff_grid)
+    stages, redists = spec.stage_order()
+    sites: List[Tuple[Optional[int], Optional[int]]] = []
+    for i, hop in enumerate(redists):
+        avoid = tuple(d + offset for d in stages[i + 1].fft_dims)
+        d = free_chunk_dim(hop, ndim_total, offset, avoid_dims=avoid)
+        if d is None:
+            sites.append((None, None))
+        elif d < offset:
+            sites.append((d, None))
+        else:
+            block = local_shape(stages[i], spec.eff_grid, axis_sizes)
+            sites.append((d, block[d - offset]))
+    return sites
+
+
 def make_spec(mesh: Mesh, grid: Tuple[int, ...], decomp: Decomposition,
               kinds: Tuple[str, ...], *, backend: str = "xla",
               n_chunks: int = 1, inverse: bool = False,
               batch_spec: Tuple[Optional[str], ...] = ()) -> PipelineSpec:
+    """Build a :class:`PipelineSpec`, clamping an infeasible chunk count.
+
+    A requested ``n_chunks`` that does not divide some hop's chunk-dim
+    local size is clamped to the largest count that divides them all (the
+    clamp is recorded: ``spec.n_chunks_requested`` keeps the ask and
+    ``describe()`` reports it), so a tuner- or user-selected chunk count
+    never aborts the plan on an odd grid.
+    """
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     eff = effective_grid(tuple(grid), decomp, axis_sizes, tuple(kinds))
-    return PipelineSpec(grid=tuple(grid), eff_grid=tuple(eff), decomp=decomp,
+    spec = PipelineSpec(grid=tuple(grid), eff_grid=tuple(eff), decomp=decomp,
                         kinds=tuple(kinds), backend=backend,
                         n_chunks=n_chunks, inverse=inverse,
-                        batch_spec=tuple(batch_spec))
+                        batch_spec=tuple(batch_spec),
+                        n_chunks_requested=n_chunks)
+    if n_chunks > 1:
+        sites = chunk_sites(spec, axis_sizes)
+        sizes = [s for _, s in sites if s is not None]
+        if sites and all(d is None for d, _ in sites):
+            # No hop can legally chunk (e.g. an inverse slab: the hop plus
+            # the next stage's fft_dims cover every dim) — the whole
+            # pipeline is bulk, and the spec should say so up front rather
+            # than warning per-hop at trace time.
+            warnings.warn(
+                f"no redistribution of grid {tuple(grid)} has a legal "
+                f"chunk dim ({'inverse' if inverse else 'forward'} "
+                f"{decomp.name}); running bulk instead of "
+                f"n_chunks={n_chunks}", RuntimeWarning, stacklevel=2)
+            spec = dataclasses.replace(spec, n_chunks=1)
+        else:
+            # Largest count <= n_chunks dividing every hop's chunk-dim
+            # size == the largest divisor of their gcd (same helper
+            # redistribute uses for its per-hop trace-time clamp, so the
+            # two sites agree).
+            eff_chunks = (largest_divisor_at_most(math.gcd(*sizes), n_chunks)
+                          if sizes else n_chunks)
+            if eff_chunks != n_chunks:
+                warnings.warn(
+                    f"n_chunks={n_chunks} does not evenly chunk every "
+                    f"redistribution of grid {tuple(grid)} on this mesh; "
+                    f"clamped to {eff_chunks}", RuntimeWarning, stacklevel=2)
+                spec = dataclasses.replace(spec, n_chunks=eff_chunks)
+    return spec
 
 
 def _stage_transform(spec: PipelineSpec, stage: StageLayout,
@@ -151,12 +226,18 @@ def _local_pipeline(spec: PipelineSpec) -> Callable:
     stages, redists = spec.stage_order()
 
     def run(x: jax.Array) -> jax.Array:
+        off = spec.spatial_offset
         x = _stage_transform(spec, stages[0], True, len(stages) == 1)(x)
-        for i, redist in enumerate(redists):
-            nxt = _stage_transform(spec, stages[i + 1], False,
+        for i, hop in enumerate(redists):
+            nxt_stage = stages[i + 1]
+            nxt = _stage_transform(spec, nxt_stage, False,
                                    i + 1 == len(stages) - 1)
-            x = redistribute(x, redist, n_chunks=spec.n_chunks, then=nxt,
-                             spatial_offset=spec.spatial_offset)
+            # The chunk dim must dodge the fused transform's dims, or the
+            # per-chunk FFT would run over a split dim (the inverse-slab
+            # bug); redistribute falls back to bulk when none is legal.
+            avoid = tuple(d + off for d in nxt_stage.fft_dims)
+            x = redistribute(x, hop, n_chunks=spec.n_chunks, then=nxt,
+                             spatial_offset=off, avoid_dims=avoid)
         return x
 
     return run
@@ -221,8 +302,11 @@ def compile_pipeline(mesh: Mesh, spec: PipelineSpec,
 
     # The decomposition's own axis ordering is part of the key: pencil over
     # ("data", "model") and ("model", "data") compile to different shardings.
+    # So is the hybrid stage grouping — two hybrids over the same axes with
+    # different dim_groups compile to different pipelines.
     key = plan_key(kind=spec.kinds, grid=spec.grid, dtype=str(dtype),
-                   decomp=(spec.decomp.name,) + tuple(spec.decomp.mesh_axes),
+                   decomp=(spec.decomp.name,) + tuple(spec.decomp.mesh_axes)
+                   + (spec.decomp.dim_groups,),
                    mesh_shape=tuple(mesh.devices.shape),
                    mesh_axes=tuple(mesh.axis_names), backend=spec.backend,
                    n_chunks=spec.n_chunks, inverse=spec.inverse,

@@ -22,12 +22,23 @@ import json
 import os
 import threading
 import time
+from collections import OrderedDict
 from typing import Any, Callable, Dict, Hashable, Optional, Sequence, Tuple
 
 try:  # POSIX advisory file locking for cross-process cache merging
     import fcntl
 except ImportError:  # non-POSIX: single-writer semantics, merge still runs
     fcntl = None
+
+
+def env_capacity(var: str, default: int) -> int:
+    """LRU capacity from an env var, clamped sane (shared by the compiled
+    PlanCache here and the wrapper plan memo in api.py)."""
+    try:
+        cap = int(os.environ.get(var, str(default)))
+    except ValueError:
+        cap = default
+    return max(cap, 1)
 
 
 @dataclasses.dataclass
@@ -38,13 +49,27 @@ class PlanEntry:
 
 
 class PlanCache:
-    """Thread-safe get-or-create cache for compiled FFT plans."""
+    """Thread-safe get-or-create LRU cache for compiled FFT plans.
 
-    def __init__(self):
+    Bounded (``$REPRO_PLAN_CACHE_SIZE``, default 128): a long-running
+    process sweeping many problem keys must not accumulate compiled
+    executables without limit.  Eviction drops this cache's reference
+    only — a ``DistributedFFT`` plan that holds its executable directly
+    keeps working; an evicted key simply recompiles on its next miss.
+    """
+
+    def __init__(self, capacity: Optional[int] = None):
         self._lock = threading.Lock()
-        self._plans: Dict[Hashable, PlanEntry] = {}
+        self._plans: "OrderedDict[Hashable, PlanEntry]" = OrderedDict()
+        self._capacity = capacity
         self.misses = 0
         self.hits = 0
+
+    @property
+    def capacity(self) -> int:
+        if self._capacity is not None:
+            return max(self._capacity, 1)
+        return env_capacity("REPRO_PLAN_CACHE_SIZE", 128)
 
     def get_or_create(self, key: Hashable,
                       builder: Callable[[], Any]) -> PlanEntry:
@@ -53,6 +78,7 @@ class PlanCache:
             if entry is not None:
                 entry.hits += 1
                 self.hits += 1
+                self._plans.move_to_end(key)
                 return entry
         # Build outside the lock: compiles can take seconds and must not
         # serialize unrelated plan lookups (the paper's scheduler threads
@@ -67,15 +93,19 @@ class PlanCache:
                 entry = PlanEntry(executable=executable, build_time_s=dt)
                 self._plans[key] = entry
                 self.misses += 1
+                while len(self._plans) > self.capacity:
+                    self._plans.popitem(last=False)
             else:
                 entry.hits += 1
                 self.hits += 1
+            self._plans.move_to_end(key)
         return entry
 
     def stats(self) -> Dict[str, Any]:
         with self._lock:
             return {
                 "plans": len(self._plans),
+                "capacity": self.capacity,
                 "hits": self.hits,
                 "misses": self.misses,
                 "total_build_time_s": sum(
@@ -97,7 +127,7 @@ GLOBAL_PLAN_CACHE = PlanCache()
 class TunedPlan:
     """The autotuner's decision for one problem key (JSON-serializable)."""
 
-    decomp: str                  # "pencil" | "slab"
+    decomp: str                  # "pencil" | "slab" | "hybrid"
     mesh_axes: Tuple[str, ...]   # mesh axes the decomposition runs over
     backend: str                 # "xla" | "matmul"
     n_chunks: int
@@ -106,21 +136,31 @@ class TunedPlan:
     source: str                  # "measured" | "heuristic" | "default"
     baseline_s: float = 0.0      # static default's time in the same run
     ts: float = 0.0              # epoch seconds when measured (merge tiebreak)
+    # Hybrid schedules are distinguished by their stage grouping of the
+    # spatial dims; None for pencil/slab (and for pre-hybrid wisdom files).
+    dim_groups: Optional[Tuple[Tuple[int, ...], ...]] = None
 
     def to_json(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         d["mesh_axes"] = list(self.mesh_axes)
+        if self.dim_groups is None:
+            d.pop("dim_groups")
+        else:
+            d["dim_groups"] = [list(g) for g in self.dim_groups]
         return d
 
     @classmethod
     def from_json(cls, d: Dict[str, Any]) -> "TunedPlan":
+        groups = d.get("dim_groups")
         return cls(decomp=d["decomp"], mesh_axes=tuple(d["mesh_axes"]),
                    backend=d["backend"], n_chunks=int(d["n_chunks"]),
                    predicted_s=float(d.get("predicted_s", 0.0)),
                    measured_s=float(d.get("measured_s", 0.0)),
                    source=d.get("source", "measured"),
                    baseline_s=float(d.get("baseline_s", 0.0)),
-                   ts=float(d.get("ts", 0.0)))
+                   ts=float(d.get("ts", 0.0)),
+                   dim_groups=(tuple(tuple(int(x) for x in g) for g in groups)
+                               if groups is not None else None))
 
     def describe(self) -> str:
         """One-line human-readable account of this decision and its timings.
@@ -129,7 +169,9 @@ class TunedPlan:
         they were persisted with, so a ``DistributedFFT.describe()`` built
         from a cache hit shows the original tuning evidence.
         """
-        head = (f"{self.decomp}({','.join(self.mesh_axes)})/{self.backend}"
+        from .decomp import describe_decomp  # deferred: keep plan.py light
+        decomp = describe_decomp(self.decomp, self.dim_groups)
+        head = (f"{decomp}({','.join(self.mesh_axes)})/{self.backend}"
                 f"/chunks={self.n_chunks}")
         if self.source == "measured":
             return (f"{head} [measured {self.measured_s * 1e3:.3f} ms, "

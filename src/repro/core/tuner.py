@@ -5,9 +5,11 @@ The static API defaults (``decomp="pencil"``, ``backend="xla"``,
 runtime should choose.  ``tune()`` closes that loop for one problem key
 (global grid, mesh geometry, transform kinds, dtype, batch shape):
 
-1. **enumerate** candidate plans — decomposition in {pencil, slab} over
-   every mesh-axis ordering that divides the grid, backend in
-   {xla, matmul}, ``n_chunks`` in powers of two up to the free-dim size;
+1. **enumerate** candidate plans — decomposition in {pencil, slab, hybrid}
+   (hybrid: every contiguous stage grouping of the dims, the
+   pencil-over-k-axes family) over every mesh-axis ordering that divides
+   the grid, backend in {xla, matmul}, ``n_chunks`` in powers of two up to
+   the free-dim size;
 2. **prune** them with the LogP/roofline model (`perfmodel.predict_plan_time`)
    down to the ``top_k`` most promising survivors;
 3. **measure** each survivor's compiled executable (the measurement also
@@ -51,14 +53,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from .decomp import local_shape, make_decomposition, validate_grid
+from .decomp import describe_decomp, make_decomposition, validate_grid
 from .perfmodel import (CPU_CORE, TPU_V5E, Machine, MachineProfile,
                         _calibrate_network, _time_best, calibrate,
                         predict_plan_time, profile_from_machine)
-from .pipeline import (PipelineSpec, compile_pipeline, effective_grid,
-                       input_struct, make_spec)
+from .pipeline import (PipelineSpec, chunk_sites, compile_pipeline,
+                       effective_grid, input_struct, make_spec)
 from .plan import (TunedPlan, TuningCache, global_tuning_cache, tuning_key)
-from .redistribute import free_chunk_dim
 
 BACKENDS = ("xla", "matmul")
 
@@ -71,9 +72,12 @@ class Candidate:
     mesh_axes: Tuple[str, ...]
     backend: str
     n_chunks: int
+    # Stage grouping for decomp="hybrid" (None for pencil/slab).
+    dim_groups: Optional[Tuple[Tuple[int, ...], ...]] = None
 
     def describe(self) -> str:
-        return (f"{self.decomp}({','.join(self.mesh_axes)})/"
+        decomp = describe_decomp(self.decomp, self.dim_groups)
+        return (f"{decomp}({','.join(self.mesh_axes)})/"
                 f"{self.backend}/chunks={self.n_chunks}")
 
 
@@ -158,9 +162,10 @@ def resolve_profile(cache: Optional[TuningCache] = None, *, mesh=None,
 
 def _spec_for(mesh: Mesh, grid: Tuple[int, ...], cand_decomp: str,
               mesh_axes: Tuple[str, ...], kinds: Tuple[str, ...],
-              backend: str, n_chunks: int, inverse: bool,
-              n_batch: int) -> PipelineSpec:
-    dec = make_decomposition(cand_decomp, mesh_axes, len(grid))
+              backend: str, n_chunks: int, inverse: bool, n_batch: int,
+              dim_groups=None) -> PipelineSpec:
+    dec = make_decomposition(cand_decomp, mesh_axes, len(grid),
+                             dim_groups=dim_groups)
     return make_spec(mesh, grid, dec, kinds, backend=backend,
                      n_chunks=n_chunks, inverse=inverse,
                      batch_spec=(None,) * n_batch)
@@ -172,25 +177,21 @@ def feasible_chunk_counts(spec: PipelineSpec, axis_sizes: Dict[str, int],
     """Powers of two that evenly chunk every redistribution of ``spec``.
 
     For each redistribution the chunk dim is the one ``redistribute`` will
-    pick; ``n_chunks`` must divide its local size at that stage.  Returns at
-    least ``[1]`` (the bulk path is always feasible).
+    pick (``pipeline.chunk_sites`` — which dodges the hop's exchange dims
+    *and* the downstream stage's fft_dims); ``n_chunks`` must divide its
+    local size at that stage.  Returns at least ``[1]`` (the bulk path is
+    always feasible).
     """
-    offset = len(spec.batch_spec)
-    ndim_total = offset + len(spec.eff_grid)
-    stages, redists = spec.stage_order()
     sizes = []
-    for i, redist in enumerate(redists):
-        try:
-            d = free_chunk_dim(redist, ndim_total, offset)
-        except ValueError:
-            return [1]  # no free dim anywhere: bulk only
-        if d < offset:
+    for d, size in chunk_sites(spec, axis_sizes):
+        if d is None:
+            return [1]  # some hop has no legal chunk dim: bulk only
+        if size is None:
             if d >= len(batch_shape):
                 return [1]  # batch extent unknown: don't guess
             sizes.append(batch_shape[d])
         else:
-            block = local_shape(stages[i], spec.eff_grid, axis_sizes)
-            sizes.append(block[d - offset])
+            sizes.append(size)
     counts = [1]
     n = 2
     cap = min(sizes) if sizes else 1
@@ -200,6 +201,23 @@ def feasible_chunk_counts(spec: PipelineSpec, axis_sizes: Dict[str, int],
         counts.append(n)
         n *= 2
     return counts
+
+
+def _hybrid_groupings(ndim: int, n_axes: int
+                      ) -> List[Tuple[Tuple[int, ...], ...]]:
+    """Contiguous stage groupings a hybrid over ``n_axes`` axes can run.
+
+    Every composition of the dims into ``g`` ordered groups for
+    ``2 <= g <= min(ndim, n_axes + 1)`` (each of the ``g - 1`` hops needs
+    at least one axis to move).
+    """
+    out: List[Tuple[Tuple[int, ...], ...]] = []
+    for g in range(2, min(ndim, n_axes + 1) + 1):
+        for cuts in itertools.combinations(range(1, ndim), g - 1):
+            bounds = (0,) + cuts + (ndim,)
+            out.append(tuple(tuple(range(bounds[i], bounds[i + 1]))
+                             for i in range(g)))
+    return out
 
 
 def enumerate_candidates(grid: Tuple[int, ...], mesh: Mesh,
@@ -214,6 +232,16 @@ def enumerate_candidates(grid: Tuple[int, ...], mesh: Mesh,
     over ("data", "model") and ("model", "data") shard different dims with
     different fan-outs, and on imbalanced grids only some orderings divide
     the grid at every stage (``validate_grid`` filters those out).
+
+    Hybrid schedules widen the space further: every contiguous stage
+    grouping of the dims (``_hybrid_groupings``) over every ordering of the
+    *full* axis pool — fewer transposes than pencil, more parallelism than
+    slab, and the only family that works at all when the mesh has fewer
+    than ``ndim - 1`` axes (e.g. 4-D grids on 2-axis meshes).  Groupings
+    that are structurally the pencil (all singleton groups, one axis each)
+    or the slab (one leading group over one axis) are skipped as
+    duplicates.  Enumeration stays cheap — the prune-then-measure flow
+    bounds what actually gets compiled and timed to ``top_k``.
     """
     ndim = len(grid)
     names = tuple(mesh.axis_names)
@@ -222,21 +250,33 @@ def enumerate_candidates(grid: Tuple[int, ...], mesh: Mesh,
     decomp_arity = [("pencil", ndim - 1)]
     if ndim > 2:
         decomp_arity.append(("slab", 1))
-    out: List[Candidate] = []
+    points: List[Tuple[str, Tuple[str, ...], Optional[Tuple]]] = []
     for decomp_kind, arity in decomp_arity:
         for axes in itertools.permutations(names, arity):
-            try:
-                spec = _spec_for(mesh, grid, decomp_kind, axes, kinds,
-                                 "xla", 1, inverse, n_batch)
-                validate_grid(spec.decomp, spec.eff_grid, axis_sizes)
-            except (ValueError, KeyError):
-                continue
-            chunk_counts = feasible_chunk_counts(
-                spec, axis_sizes, batch_shape, max_chunks)
-            for n_chunks in chunk_counts:
-                for backend in backends:
-                    out.append(Candidate(decomp=decomp_kind, mesh_axes=axes,
-                                         backend=backend, n_chunks=n_chunks))
+            points.append((decomp_kind, axes, None))
+    for groups in _hybrid_groupings(ndim, len(names)):
+        g = len(groups)
+        if g == ndim and len(names) == ndim - 1:
+            continue  # structurally the pencil: one axis per boundary
+        if g == 2 and len(names) == 1 and len(groups[-1]) == 1:
+            continue  # structurally the slab over the single axis
+        for axes in itertools.permutations(names, len(names)):
+            points.append(("hybrid", axes, groups))
+    out: List[Candidate] = []
+    for decomp_kind, axes, groups in points:
+        try:
+            spec = _spec_for(mesh, grid, decomp_kind, axes, kinds,
+                             "xla", 1, inverse, n_batch, dim_groups=groups)
+            validate_grid(spec.decomp, spec.eff_grid, axis_sizes)
+        except (ValueError, KeyError):
+            continue
+        chunk_counts = feasible_chunk_counts(
+            spec, axis_sizes, batch_shape, max_chunks)
+        for n_chunks in chunk_counts:
+            for backend in backends:
+                out.append(Candidate(decomp=decomp_kind, mesh_axes=axes,
+                                     backend=backend, n_chunks=n_chunks,
+                                     dim_groups=groups))
     return out
 
 
@@ -256,7 +296,8 @@ def rank_candidates(cands: Sequence[Candidate], grid: Tuple[int, ...],
     kinds = tuple(kinds) if kinds is not None else None
     ranked = []
     for cand in cands:
-        dec = make_decomposition(cand.decomp, cand.mesh_axes, len(grid))
+        dec = make_decomposition(cand.decomp, cand.mesh_axes, len(grid),
+                                 dim_groups=cand.dim_groups)
         eff = (effective_grid(grid, dec, axis_sizes, kinds)
                if kinds is not None else None)
         pred = predict_plan_time(grid, dec, axis_sizes, machine,
@@ -304,7 +345,8 @@ def measure_candidate(cand: Candidate, grid: Tuple[int, ...], mesh: Mesh,
     user calls ``fftnd`` afterwards.
     """
     spec = _spec_for(mesh, grid, cand.decomp, cand.mesh_axes, kinds,
-                     cand.backend, cand.n_chunks, inverse, len(batch_shape))
+                     cand.backend, cand.n_chunks, inverse, len(batch_shape),
+                     dim_groups=cand.dim_groups)
     exe = compile_pipeline(mesh, spec, batch_shape=batch_shape, dtype=dtype)
     arg = input_struct(mesh, spec, batch_shape, dtype)
     x = synth_input(arg)
@@ -343,7 +385,8 @@ def resolve_tuned_plan(grid: Sequence[int], mesh: Mesh, *,
         return TunedPlan(decomp=default.decomp,
                          mesh_axes=tuple(default.mesh_axes),
                          backend=default.backend, n_chunks=default.n_chunks,
-                         predicted_s=0.0, measured_s=0.0, source="default")
+                         predicted_s=0.0, measured_s=0.0, source="default",
+                         dim_groups=default.dim_groups)
     return tune(grid, mesh, kinds=kinds, dtype=dtype, inverse=inverse,
                 batch_shape=batch_shape, mode=mode, cache=cache)
 
@@ -421,7 +464,7 @@ def tune(grid: Sequence[int], mesh: Mesh, *,
         return TunedPlan(decomp=best.decomp, mesh_axes=best.mesh_axes,
                          backend=best.backend, n_chunks=best.n_chunks,
                          predicted_s=pred, measured_s=0.0,
-                         source="heuristic")
+                         source="heuristic", dim_groups=best.dim_groups)
 
     survivors = [c for _, c in ranked[:max(top_k, 1)]]
     baseline = _default_candidate(cands)
@@ -441,7 +484,8 @@ def tune(grid: Sequence[int], mesh: Mesh, *,
                      backend=best_cand.backend, n_chunks=best_cand.n_chunks,
                      predicted_s=predicted.get(best_cand, 0.0),
                      measured_s=best_time, source="measured",
-                     baseline_s=baseline_time, ts=time.time())
+                     baseline_s=baseline_time, ts=time.time(),
+                     dim_groups=best_cand.dim_groups)
     if unrestricted:
         # A restricted winner (e.g. backends=("xla",) or max_chunks=2) was
         # picked from a smaller space under the same key; persisting it

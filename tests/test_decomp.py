@@ -1,0 +1,187 @@
+"""Decomposition-engine unit tests (pure metadata, no devices).
+
+The hybrid (pencil-over-k-axes) family generalizes pencil/slab: any
+contiguous stage grouping of the spatial dims, each hop moving one or more
+mesh axes between the adjacent groups.  These tests pin the structural
+invariants every schedule must satisfy — and *simulate* the hop move
+sequences against the declared stage specs, so a construction bug that
+desynchronizes the metadata from the data movement fails here before any
+shard_map runs.
+"""
+import pytest
+
+from repro.core.decomp import (Decomposition, RedistHop, Redistribution,
+                               StageLayout, axis_product, default_dim_groups,
+                               hybrid_nd, local_shape, make_decomposition,
+                               pencil_nd, slab_nd, spec_axes, validate_grid)
+from repro.core.redistribute import free_chunk_dim, largest_divisor_at_most
+
+AXIS_SIZES = {"a": 2, "b": 4, "c": 2}
+
+
+def _simulate(decomp: Decomposition) -> None:
+    """Replay every hop's moves and check each declared stage spec.
+
+    An all_to_all move takes its axis off the *minor* (last) position of
+    the source dim's tuple and appends it to the dest dim's tuple — the
+    only order for which sequential tiled exchanges keep a clean block
+    layout.  The declared specs must match the replay exactly.
+    """
+    spec = [list(spec_axes(e)) for e in decomp.stages[0].spec]
+    for stage, hop in zip(decomp.stages[1:], decomp.redists):
+        for mv in hop.moves:
+            assert spec[mv.concat_dim], \
+                f"move gathers {mv.mesh_axis} off an unsharded dim"
+            popped = spec[mv.concat_dim].pop()
+            assert popped == mv.mesh_axis, (
+                f"move over {mv.mesh_axis} must peel the minor axis, "
+                f"found {popped}")
+            spec[mv.split_dim].append(mv.mesh_axis)
+        got = tuple(tuple(s) for s in spec)
+        want = tuple(spec_axes(e) for e in stage.spec)
+        assert got == want, f"stage spec {want} != replayed layout {got}"
+
+
+def _check_invariants(decomp: Decomposition, ndim: int) -> None:
+    assert len(decomp.redists) == len(decomp.stages) - 1
+    all_axes = set(decomp.mesh_axes)
+    seen_dims = []
+    for stage in decomp.stages:
+        # every fft dim is unsharded, every mesh axis is placed exactly once
+        placed = [ax for e in stage.spec for ax in spec_axes(e)]
+        assert sorted(placed) == sorted(all_axes), \
+            f"stage {stage.spec} does not place every axis exactly once"
+        for d in stage.fft_dims:
+            assert stage.spec[d] is None
+        seen_dims.extend(stage.fft_dims)
+    # stages together transform each dim exactly once, in order
+    assert sorted(seen_dims) == list(range(ndim))
+    _simulate(decomp)
+
+
+@pytest.mark.parametrize("groups,axes", [
+    (((0, 1), (2,)), ("a", "b")),          # 3-D "2+1" hybrid
+    (((0,), (1, 2)), ("a", "b")),          # 3-D "1+2": multi-axis dim 0
+    (((0, 1), (2, 3)), ("a", "b")),        # 4-D two slab stages, one hop
+    (((0,), (1,), (2, 3)), ("a", "b")),    # 4-D pencil-over-2-axes
+    (((0, 1), (2, 3)), ("a", "b", "c")),   # more axes than hops
+    (((0,), (1,)), ("a", "b")),            # 2-D over 2 axes
+    (((0, 1, 2), (3,)), ("a", "b", "c")),  # 4-D 3+1, 3 axes on one dim
+])
+def test_hybrid_invariants(groups, axes):
+    ndim = sum(len(g) for g in groups)
+    dec = hybrid_nd(groups, axes)
+    assert dec.name == "hybrid"
+    assert dec.dim_groups == groups
+    assert len(dec.stages) == len(groups)
+    for stage, grp in zip(dec.stages, groups):
+        assert stage.fft_dims == grp
+    # every axis crosses exactly one stage boundary: total moves == n axes
+    assert sum(len(h.moves) for h in dec.redists) == len(axes)
+    _check_invariants(dec, ndim)
+
+
+@pytest.mark.parametrize("ndim,axes", [(3, ("a", "b")), (4, ("a", "b", "c")),
+                                       (2, ("a",))])
+def test_pencil_slab_still_valid(ndim, axes):
+    _check_invariants(pencil_nd(axes[:ndim - 1], ndim), ndim)
+    _check_invariants(slab_nd(axes[0], ndim), ndim)
+
+
+def test_hybrid_recovers_pencil_structure():
+    """All-singleton groups with one axis per boundary == the pencil."""
+    hyb = hybrid_nd(((0,), (1,), (2,)), ("a", "b"))
+    pen = pencil_nd(("a", "b"), 3)
+    assert tuple(s.spec for s in hyb.stages) == \
+        tuple(s.spec for s in pen.stages)
+    assert hyb.redists == pen.redists
+
+
+def test_hybrid_recovers_slab_structure():
+    """One (ndim-1)-group over one axis == the slab."""
+    hyb = hybrid_nd(((0, 1), (2,)), ("a",))
+    slb = slab_nd("a", 3)
+    assert tuple(s.spec for s in hyb.stages) == \
+        tuple(s.spec for s in slb.stages)
+    assert hyb.redists == slb.redists
+
+
+def test_hybrid_4d_on_2_axes_single_hop():
+    """The flagship new point: 4-D over 2 axes as two 2-dim slab stages."""
+    dec = hybrid_nd(((0, 1), (2, 3)), ("a", "b"))
+    assert len(dec.stages) == 2 and len(dec.redists) == 1
+    assert len(dec.redists[0].moves) == 2          # one all_to_all per axis
+    assert dec.stages[0].spec == (None, None, "a", "b")
+    assert dec.stages[1].spec == ("a", "b", None, None)
+    with pytest.raises(ValueError):
+        pencil_nd(("a", "b"), 4)                   # impossible at 2 axes
+
+
+def test_hybrid_multi_axis_dim():
+    """A group smaller than its axis pool packs several axes on one dim."""
+    dec = hybrid_nd(((0,), (1, 2)), ("a", "b"))
+    assert dec.stages[1].spec == (("a", "b"), None, None)
+    assert axis_product(dec.stages[1].spec[0], AXIS_SIZES) == 8
+    assert local_shape(dec.stages[1], (16, 8, 8), AXIS_SIZES) == (2, 8, 8)
+
+
+def test_hop_inverse_round_trips():
+    dec = hybrid_nd(((0,), (1, 2)), ("a", "b"))
+    hop = dec.redists[0]
+    inv = hop.inverse()
+    assert inv.moves == tuple(m.inverse() for m in reversed(hop.moves))
+    assert inv.inverse() == hop
+
+
+def test_validate_grid_multi_axis():
+    dec = hybrid_nd(((0,), (1, 2)), ("a", "b"))
+    validate_grid(dec, (8, 8, 8), AXIS_SIZES)      # 8 % (2*4) == 0
+    with pytest.raises(ValueError, match="not divisible"):
+        validate_grid(dec, (12, 8, 8), AXIS_SIZES)  # 12 % 8 != 0
+
+
+def test_hybrid_rejects_bad_groupings():
+    with pytest.raises(ValueError, match="contiguous"):
+        hybrid_nd(((0, 2), (1,)), ("a", "b"))       # not contiguous
+    with pytest.raises(ValueError, match="contiguous"):
+        hybrid_nd(((0,), (2,)), ("a", "b"))         # gap
+    with pytest.raises(ValueError):
+        hybrid_nd(((0, 1, 2),), ("a", "b"))         # single group
+    with pytest.raises(ValueError, match="mesh axes"):
+        hybrid_nd(((0,), (1,), (2,)), ("a",))       # 2 hops, 1 axis
+    with pytest.raises(ValueError):
+        hybrid_nd(((0,), (1,)), ("a", "a"))         # repeated axis
+
+
+def test_make_decomposition_hybrid_defaults():
+    dec = make_decomposition("hybrid", ("a", "b"), ndim=4)
+    assert dec.dim_groups == ((0, 1), (2, 3))
+    dec3 = make_decomposition("hybrid", ("a", "b"), ndim=3,
+                              dim_groups=((0,), (1, 2)))
+    assert dec3.dim_groups == ((0,), (1, 2))
+    assert default_dim_groups(5, 2) == ((0, 1, 2), (3, 4))
+
+
+def test_stage_layout_rejects_sharded_fft_dim():
+    with pytest.raises(ValueError, match="sharded"):
+        StageLayout(spec=(("a", "b"), None, None), fft_dims=(0,))
+
+
+def test_free_chunk_dim_avoids_downstream_fft_dims():
+    """The inverse-slab bug, at the unit level: the hop frees dim 1 but the
+    next stage transforms it, so no spatial chunk dim is legal."""
+    inv_hop = RedistHop((Redistribution(mesh_axis="a", split_dim=2,
+                                        concat_dim=0),))
+    # without the fft-dims guard the old code picked dim 1 (corrupting the
+    # fused per-chunk 2-D FFT); with it there is no legal dim at all
+    assert free_chunk_dim(inv_hop, 3, 0) == 1
+    assert free_chunk_dim(inv_hop, 3, 0, avoid_dims=(0, 1)) is None
+    # a leading batch dim rescues chunkability
+    assert free_chunk_dim(inv_hop.moves[0], 4, 1, avoid_dims=(1, 2)) == 0
+
+
+def test_largest_divisor_at_most():
+    assert largest_divisor_at_most(16, 4) == 4
+    assert largest_divisor_at_most(12, 8) == 6
+    assert largest_divisor_at_most(7, 4) == 1
+    assert largest_divisor_at_most(4, 9) == 4

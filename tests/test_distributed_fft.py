@@ -40,16 +40,166 @@ print("fwd", relerr(y, ref))
     assert float(out.split()[-1]) < 1e-5
 
 
-@pytest.mark.parametrize("n_chunks", [2, 4])
-def test_chunked_overlap_identical(n_chunks):
-    out = run_subprocess(COMMON + f"""
-y_bulk = fft3d(jnp.asarray(x), mesh=mesh, decomp="pencil", n_chunks=1)
-y_chk = fft3d(jnp.asarray(x), mesh=mesh, decomp="pencil", n_chunks={n_chunks})
-print("diff", float(np.max(np.abs(np.asarray(y_bulk) - np.asarray(y_chk)))))
-print("fwd", relerr(y_chk, ref))
+def test_hybrid_c2c_and_roundtrip():
+    """3-D "2+1" hybrid: 2 stages over both mesh axes (pencil parallelism,
+    slab transpose count) — a schedule neither pencil nor slab can
+    express."""
+    out = run_subprocess(COMMON + """
+y = fft3d(jnp.asarray(x), mesh=mesh, decomp="hybrid")
+print("fwd", relerr(y, ref))
+xb = ifft3d(y, mesh=mesh, decomp="hybrid")
+print("rt", float(np.max(np.abs(np.asarray(xb) - x))))
 """)
     vals = dict(l.split() for l in out.strip().splitlines())
-    assert float(vals["diff"]) < 1e-6  # bulk and pipelined paths identical
+    assert float(vals["fwd"]) < 1e-5
+    assert float(vals["rt"]) < 1e-5
+
+
+def test_hybrid_multi_axis_dim_roundtrip():
+    """The "1+2" grouping shards dim 0 over BOTH mesh axes at once in its
+    final stage (multi-axis PartitionSpec entry)."""
+    out = run_subprocess(COMMON + """
+from repro.core import plan_fft
+p = plan_fft(mesh, (8, 8, 16), decomp="hybrid", dim_groups=((0,), (1, 2)))
+y = p(jnp.asarray(x))
+print("fwd", relerr(y, ref))
+xb = p.inverse(y)
+print("rt", float(np.max(np.abs(np.asarray(xb) - x))))
+print("spec0", str(p.out_sharding.spec))
+""")
+    vals = dict(l.split(None, 1) for l in out.strip().splitlines())
+    assert float(vals["fwd"]) < 1e-5
+    assert float(vals["rt"]) < 1e-5
+    assert "'data', 'model'" in vals["spec0"]   # tuple-sharded dim 0
+
+
+def test_fftnd_4d_hybrid_2axis_mesh():
+    """Acceptance: a 4-D FFT plans and round-trips on a 2-axis mesh via a
+    hybrid decomposition — impossible at HEAD (pencil demands 3 axes, and
+    4-D slab leaves all but one axis idle)."""
+    out = run_subprocess(COMMON + """
+from repro.core import plan_fft
+x4 = (rng.standard_normal((4, 4, 8, 8))
+      + 1j*rng.standard_normal((4, 4, 8, 8))).astype(np.complex64)
+p = plan_fft(mesh, (4, 4, 8, 8))     # no decomp given: defaults to hybrid
+print("decomp", p.decomp)
+print("stages", len(p._fwd_spec.decomp.stages))
+y = p(jnp.asarray(x4))
+ref4 = np.fft.fftn(x4)
+print("fwd", float(np.max(np.abs(np.asarray(y) - ref4)) / np.max(np.abs(ref4))))
+xb = p.inverse(y)
+print("rt", float(np.max(np.abs(np.asarray(xb) - x4))))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert vals["decomp"] == "hybrid"
+    assert int(vals["stages"]) == 2      # two 2-dim slab stages, one hop
+    assert float(vals["fwd"]) < 1e-5
+    assert float(vals["rt"]) < 1e-5
+
+
+@pytest.mark.parametrize("decomp,mesh_axes", [
+    ("pencil", ("data", "model")),
+    ("slab", ("model",)),
+    ("hybrid", ("data", "model")),
+])
+@pytest.mark.parametrize("kind0", ["fft", "rfft"])
+def test_chunked_bulk_identity_sweep(decomp, mesh_axes, kind0):
+    """Alg. 2 acceptance: for every decomposition family, both directions
+    and both C2C/R2C, the chunk-pipelined path must be numerically
+    identical to the bulk path at every chunk count.
+
+    The slab-inverse cell is the regression for the ``free_chunk_dim``
+    bug: at HEAD it chunked along a dim the next stage FFTs over and
+    silently produced wrong results; the fixed chunk-dim choice either
+    finds a legal dim or falls back to bulk (warning) — never corrupts.
+    """
+    grid = (8, 8, 16) if kind0 == "fft" else (14, 8, 16)
+    kinds = (kind0, "fft", "fft")
+    out = run_subprocess(COMMON + f"""
+import warnings
+from repro.core import plan_fft
+warnings.simplefilter("ignore")   # bulk-fallback / clamp warnings expected
+grid = {grid!r}
+kinds = {kinds!r}
+if kinds[0] == "rfft":
+    xin = rng.standard_normal(grid).astype(np.float32)
+else:
+    xin = (rng.standard_normal(grid)
+           + 1j*rng.standard_normal(grid)).astype(np.complex64)
+ref = np.fft.fftn(xin)
+nfreq = grid[0]//2 + 1
+plans = {{n: plan_fft(mesh, grid, kinds=kinds, decomp={decomp!r},
+                      mesh_axes={mesh_axes!r}, n_chunks=n)
+          for n in (1, 2, 4)}}
+y = {{n: p(jnp.asarray(xin)) for n, p in plans.items()}}
+xb = {{n: p.inverse(y[n]) for n, p in plans.items()}}
+for n in (2, 4):
+    print(f"fwd_diff_{{n}}",
+          float(np.max(np.abs(np.asarray(y[1]) - np.asarray(y[n])))))
+    print(f"inv_diff_{{n}}",
+          float(np.max(np.abs(np.asarray(xb[1]) - np.asarray(xb[n])))))
+yv = np.asarray(y[4])[:nfreq] if kinds[0] == "rfft" else np.asarray(y[4])
+rv = ref[:nfreq] if kinds[0] == "rfft" else ref
+print("fwd", float(np.max(np.abs(yv - rv)) / np.max(np.abs(rv))))
+print("rt", float(np.max(np.abs(np.real(np.asarray(xb[4])) - np.real(xin)))))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    for n in (2, 4):
+        assert float(vals[f"fwd_diff_{n}"]) < 1e-6, (decomp, kind0, n)
+        assert float(vals[f"inv_diff_{n}"]) < 1e-6, (decomp, kind0, n)
+    assert float(vals["fwd"]) < 1e-5
+    assert float(vals["rt"]) < 1e-5
+
+
+def test_chunked_inverse_slab_matches_bulk_inverse():
+    """Direct regression for the free_chunk_dim bug: a chunked inverse
+    slab pipeline must reproduce the bulk inverse exactly (at HEAD it
+    fused a per-chunk 2-D FFT over a split dim and corrupted the
+    output)."""
+    out = run_subprocess(COMMON + """
+import warnings
+from repro.core import plan_fft
+warnings.simplefilter("ignore")
+pb = plan_fft(mesh, (8, 8, 16), decomp="slab", mesh_axes=("model",),
+              n_chunks=1)
+pc = plan_fft(mesh, (8, 8, 16), decomp="slab", mesh_axes=("model",),
+              n_chunks=2)
+yk = pb(jnp.asarray(x))
+ib = pb.inverse(yk)
+ic = pc.inverse(yk)
+print("inv_diff", float(np.max(np.abs(np.asarray(ib) - np.asarray(ic)))))
+print("rt", float(np.max(np.abs(np.asarray(ic) - x))))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert float(vals["inv_diff"]) < 1e-6   # was ~O(1) at HEAD
+    assert float(vals["rt"]) < 1e-5
+
+
+def test_chunk_count_clamped_on_odd_grid():
+    """A tuner/user chunk count that does not divide the chunk dim's local
+    size must clamp (recorded on the spec) instead of raising at trace
+    time."""
+    out = run_subprocess(COMMON + """
+import warnings
+from repro.core import plan_fft
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter("always")
+    p = plan_fft(mesh, (4, 8, 16), decomp="pencil", n_chunks=8)
+xs = (rng.standard_normal((4, 8, 16))
+      + 1j*rng.standard_normal((4, 8, 16))).astype(np.complex64)
+y = p(jnp.asarray(xs))
+print("n_chunks", p.n_chunks)
+print("requested", p._fwd_spec.n_chunks_requested)
+print("warned", int(any("clamped" in str(x.message) for x in w)))
+print("described", int("clamped from 8" in p.describe()))
+print("fwd", float(np.max(np.abs(np.asarray(y) - np.fft.fftn(xs)))
+                   / np.max(np.abs(np.fft.fftn(xs)))))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert int(vals["n_chunks"]) == 2       # largest divisor of gcd(4, 2)
+    assert int(vals["requested"]) == 8
+    assert vals["warned"] == "1"
+    assert vals["described"] == "1"
     assert float(vals["fwd"]) < 1e-5
 
 

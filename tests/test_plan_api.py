@@ -125,6 +125,68 @@ def test_no_deprecation_warning_when_tuning_off(cpu_mesh):
                 if issubclass(w.category, DeprecationWarning)]
 
 
+def test_plan_cache_lru_bound():
+    """The compiled-executable cache under the memo is LRU-bounded too —
+    without this, memo eviction would release the plan handle but the
+    executable would live on in the global cache forever."""
+    from repro.core.plan import PlanCache
+    pc = PlanCache(capacity=2)
+    for i in range(4):
+        pc.get_or_create(i, lambda i=i: f"exe{i}")
+    assert pc.stats()["plans"] == 2
+    assert pc.stats()["capacity"] == 2
+    pc.get_or_create(2, lambda: "rebuilt")       # touch: now most recent
+    pc.get_or_create(9, lambda: "exe9")          # evicts 3, not 2
+    assert pc.get_or_create(2, lambda: "rebuilt").executable == "exe2"
+
+
+def test_plan_fft_dim_groups_implies_hybrid(cpu_mesh):
+    """dim_groups without decomp= must select hybrid on any mesh, not
+    raise against a defaulted pencil."""
+    from repro.core import plan_fft
+    plan = plan_fft(cpu_mesh, (8, 8, 16), dim_groups=((0, 1), (2,)),
+                    precompiled=False)
+    assert plan.decomp == "hybrid"
+    assert plan._fwd_spec.decomp.dim_groups == ((0, 1), (2,))
+    with pytest.raises(ValueError, match="hybrid"):
+        plan_fft(cpu_mesh, (8, 8, 16), decomp="pencil",
+                 dim_groups=((0, 1), (2,)), precompiled=False)
+
+
+def test_plan_memo_lru_bound(cpu_mesh, monkeypatch):
+    """Satellite: the wrapper plan memo is LRU-bounded so long-running
+    serving processes sweeping many (grid, mesh, dtype) keys cannot grow
+    plan handles (and their compiled executables) without bound."""
+    import jax.numpy as jnp
+
+    from repro.core import fftnd
+    from repro.core.api import clear_plan_memo, plan_memo_stats
+
+    monkeypatch.setenv("REPRO_PLAN_MEMO_SIZE", "2")
+    clear_plan_memo()
+    try:
+        rng = np.random.default_rng(0)
+        for n in (4, 8, 16, 32):
+            x = jnp.asarray((rng.standard_normal((n, 4))
+                             + 0j).astype(np.complex64))
+            fftnd(x, mesh=cpu_mesh, precompiled=False)
+            assert plan_memo_stats()["plans"] <= 2
+        stats = plan_memo_stats()
+        assert stats == {"plans": 2, "capacity": 2}
+        # reuse of a resident key must not evict it (LRU, not FIFO): touch
+        # the (32, 4) plan, insert a new key, and the touched plan survives
+        x32 = jnp.asarray((rng.standard_normal((32, 4))
+                           + 0j).astype(np.complex64))
+        fftnd(x32, mesh=cpu_mesh, precompiled=False)
+        n_before = plan_memo_stats()["plans"]
+        x64 = jnp.asarray((rng.standard_normal((64, 4))
+                           + 0j).astype(np.complex64))
+        fftnd(x64, mesh=cpu_mesh, precompiled=False)
+        assert plan_memo_stats()["plans"] == n_before == 2
+    finally:
+        clear_plan_memo()
+
+
 # ---------------------------------------------------------------------------
 # Subprocess (8-device mesh): reuse, sharded-in, wrapper parity
 # ---------------------------------------------------------------------------

@@ -71,6 +71,59 @@ def test_feasible_chunk_counts(cpu_mesh):
                                  max_chunks=2) == [1, 2]
 
 
+def test_feasible_chunk_counts_inverse_slab_bulk_only(cpu_mesh):
+    """The fft-dims-aware chunk-dim choice leaves the inverse slab with no
+    legal chunk dim (the hop touches dims 0 and 2, the next stage FFTs
+    dims 0 and 1), so only the bulk path is feasible — the tuner must not
+    propose chunk counts that would silently fall back."""
+    import dataclasses
+    from repro.core.decomp import make_decomposition
+    from repro.core.pipeline import make_spec
+    from repro.core.tuner import feasible_chunk_counts
+    dec = make_decomposition("slab", ("model",), 3)
+    fwd = make_spec(cpu_mesh, (8, 8, 16), dec, ("fft",) * 3)
+    inv = dataclasses.replace(fwd, inverse=True)
+    assert feasible_chunk_counts(fwd, {"data": 1, "model": 1}) == \
+        [1, 2, 4, 8]
+    assert feasible_chunk_counts(inv, {"data": 1, "model": 1}) == [1]
+
+
+def test_enumerate_includes_hybrids_for_3d(cpu_mesh):
+    """Acceptance: hybrid candidates ride alongside pencil/slab for 3-D."""
+    from repro.core.tuner import enumerate_candidates
+    cands = enumerate_candidates((8, 8, 16), cpu_mesh, ("fft",) * 3)
+    by_kind = {}
+    for c in cands:
+        by_kind.setdefault(c.decomp, set()).add((c.mesh_axes, c.dim_groups))
+    assert {"pencil", "slab", "hybrid"} <= set(by_kind)
+    groups = {g for _, g in by_kind["hybrid"]}
+    assert ((0, 1), (2,)) in groups     # the "2+1" hybrid
+    assert ((0,), (1, 2)) in groups     # the "1+2" hybrid
+    # no duplicate of the pencil structure (all singleton groups over the
+    # 2-axis pool IS the pencil and is enumerated only there)
+    assert ((0,), (1,), (2,)) not in groups
+
+
+def test_enumerate_4d_on_2axis_mesh(cpu_mesh):
+    """A 4-D grid on a 2-axis mesh has no pencil; slab + hybrids carry it."""
+    from repro.core.tuner import enumerate_candidates
+    cands = enumerate_candidates((4, 4, 8, 8), cpu_mesh, ("fft",) * 4)
+    kinds = {c.decomp for c in cands}
+    assert "pencil" not in kinds
+    assert {"slab", "hybrid"} <= kinds
+    assert any(c.dim_groups == ((0, 1), (2, 3)) for c in cands)
+
+
+def test_tuned_plan_dim_groups_json_roundtrip():
+    hyb = _plan(decomp="hybrid", dim_groups=((0, 1), (2, 3)))
+    assert TunedPlan.from_json(hyb.to_json()) == hyb
+    assert "hybrid[2+2]" in hyb.describe()
+    # pencil/slab plans (and pre-hybrid wisdom entries) stay None
+    plain = _plan()
+    assert "dim_groups" not in plain.to_json()
+    assert TunedPlan.from_json(plain.to_json()).dim_groups is None
+
+
 # ---------------------------------------------------------------------------
 # Persistent tuning cache (pure, in-process)
 # ---------------------------------------------------------------------------
@@ -336,6 +389,33 @@ print("platform", prof.platform)
     assert vals["has_machine"] == "1"
     assert vals["loaded_calibrated"] == "1"
     assert vals["platform"] == "cpu"
+
+
+def test_tune_4d_hybrid_space_and_wisdom_roundtrip():
+    """Auto-tuning a 4-D problem on the 2-axis mesh searches the hybrid
+    space (pencil cannot exist there) and the winner — dim_groups included
+    — survives the wisdom-file round trip."""
+    out = run_subprocess(TUNE_COMMON + """
+import warnings
+warnings.simplefilter("ignore")
+grid = (4, 4, 8, 8)
+p1 = tune(grid, mesh, cache=TuningCache(path), top_k=2, repeats=1)
+print("source", p1.source)
+c2 = TuningCache(path)
+p2 = tune(grid, mesh, cache=c2, top_k=2, repeats=1)
+print("same_plan", int(p1 == p2))
+print("hit", c2.stats()["hits"])
+from repro.core.tuner import enumerate_candidates
+cands = enumerate_candidates(grid, mesh, ("fft",)*4)
+print("has_hybrid", int(any(c.decomp == "hybrid" for c in cands)))
+print("has_pencil", int(any(c.decomp == "pencil" for c in cands)))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert vals["source"] == "measured"
+    assert vals["same_plan"] == "1"
+    assert int(vals["hit"]) == 1
+    assert vals["has_hybrid"] == "1"
+    assert vals["has_pencil"] == "0"
 
 
 def test_fft3d_tuning_auto_matches_numpy():
