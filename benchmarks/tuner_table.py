@@ -83,10 +83,10 @@ def run() -> None:
     kinds4 = ("fft",) * 4
     label4 = "x".join(map(str, grid4))
     prof4 = resolve_profile(cache, mesh=mesh, allow_calibrate=False)
-    cands4 = enumerate_candidates(grid4, mesh, kinds4)
+    cands4 = enumerate_candidates(grid4, mesh, kinds4, machine=prof4)
+    ranked_all4 = rank_candidates(cands4, grid4, mesh, prof4, kinds=kinds4)
     best_by_family = {}
-    for pred, cand in rank_candidates(cands4, grid4, mesh, prof4,
-                                      kinds=kinds4):
+    for pred, cand in ranked_all4:
         best_by_family.setdefault(cand.decomp, (pred, cand))
     for family in ("pencil", "slab", "hybrid"):
         if family not in best_by_family:
@@ -97,6 +97,27 @@ def run() -> None:
         t = measure_candidate(cand, grid4, mesh, kinds4,
                               jax.numpy.complex64)
         emit(f"tuner4d_{family}_{label4}", t * 1e6,
+             f"pred={pred * 1e6:.0f}us {cand.describe()}")
+
+    # Best uniform n_chunks vs best per-hop schedule on the asymmetric
+    # multi-hop hybrids: the chunk-schedule policy engine's pitch.  The
+    # uniform row is the best hybrid whose hops all share one count; the
+    # per-hop row is the best scheduler-proposed heterogeneous schedule
+    # (absent when the policy argmin is uniform on this machine).
+    ranked4 = [(p, c) for p, c in ranked_all4 if c.decomp == "hybrid"]
+    best_uni = next(((p, c) for p, c in ranked4
+                     if c.chunk_schedule is None), None)
+    best_het = next(((p, c) for p, c in ranked4
+                     if c.chunk_schedule is not None), None)
+    for tag, pick in (("uniform", best_uni), ("perhop", best_het)):
+        if pick is None:
+            emit(f"tuner4d_chunks_{tag}_{label4}", 0.0,
+                 "no such candidate (policy argmin is uniform)")
+            continue
+        pred, cand = pick
+        t = measure_candidate(cand, grid4, mesh, kinds4,
+                              jax.numpy.complex64)
+        emit(f"tuner4d_chunks_{tag}_{label4}", t * 1e6,
              f"pred={pred * 1e6:.0f}us {cand.describe()}")
 
     # Block 3: does calibration improve the pruning model's ranking?

@@ -9,17 +9,20 @@ from .decomp import (Decomposition, RedistHop, Redistribution, StageLayout,
                      default_dim_groups, hybrid_nd, local_shape,
                      make_decomposition, pencil, pencil_nd, slab, slab_nd,
                      validate_grid)
-from .perfmodel import (Machine, MachineProfile, calibrate,
-                        predict_plan_time, profile_from_machine)
+from .perfmodel import (Machine, MachineProfile, calibrate, hop_cost_terms,
+                        predict_plan_time, profile_from_machine,
+                        stage_comp_times)
 from .pipeline import (PipelineSpec, build_pipeline, compile_pipeline,
                        effective_grid, input_struct, make_spec,
                        output_struct)
 from .plan import (GLOBAL_PLAN_CACHE, PlanCache, TunedPlan, TuningCache,
                    global_tuning_cache, plan_key, tuning_key)
 from .redistribute import free_chunk_dim, redistribute, transpose_cost_bytes
-from .tuner import (Candidate, enumerate_candidates, measure_candidate,
-                    rank_candidates, resolve_profile, resolve_tuned_plan,
-                    synth_input, tune)
+from .scheduler import choose_chunk_schedule, hop_phase_time
+from .tuner import (Candidate, enumerate_candidates,
+                    feasible_hop_chunk_counts, measure_candidate,
+                    propose_chunk_schedule, rank_candidates,
+                    resolve_profile, resolve_tuned_plan, synth_input, tune)
 from . import transforms
 
 __all__ = [
@@ -34,10 +37,11 @@ __all__ = [
     "input_struct", "make_spec", "output_struct",
     "GLOBAL_PLAN_CACHE", "PlanCache", "plan_key",
     "TunedPlan", "TuningCache", "global_tuning_cache", "tuning_key",
-    "Machine", "MachineProfile", "calibrate", "predict_plan_time",
-    "profile_from_machine",
-    "Candidate", "enumerate_candidates", "measure_candidate",
-    "rank_candidates", "resolve_profile", "resolve_tuned_plan",
-    "synth_input", "tune",
+    "Machine", "MachineProfile", "calibrate", "hop_cost_terms",
+    "predict_plan_time", "profile_from_machine", "stage_comp_times",
+    "Candidate", "enumerate_candidates", "feasible_hop_chunk_counts",
+    "measure_candidate", "propose_chunk_schedule", "rank_candidates",
+    "resolve_profile", "resolve_tuned_plan", "synth_input", "tune",
+    "choose_chunk_schedule", "hop_phase_time",
     "free_chunk_dim", "redistribute", "transpose_cost_bytes", "transforms",
 ]

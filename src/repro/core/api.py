@@ -216,7 +216,13 @@ class DistributedFFT:
 
     @property
     def n_chunks(self) -> int:
+        """Deepest hop of the chunk schedule (back-compat scalar view)."""
         return self._fwd_spec.n_chunks
+
+    @property
+    def chunk_schedule(self) -> Tuple[int, ...]:
+        """Per-hop chunk counts of the forward pipeline (one per hop)."""
+        return self._fwd_spec.chunk_schedule
 
     @property
     def dtype(self) -> jnp.dtype:
@@ -266,13 +272,28 @@ class DistributedFFT:
             for inv, don in exe_keys)
         decomp = describe_decomp(self.decomp,
                                  self._fwd_spec.decomp.dim_groups)
-        chunks = str(self.n_chunks)
-        if self._fwd_spec.chunk_clamped:
-            chunks += (f" (clamped from "
-                       f"{self._fwd_spec.n_chunks_requested})")
-        if self._inv_spec.n_chunks != self._fwd_spec.n_chunks:
+        fwd = self._fwd_spec
+        if fwd.uniform_chunks:
+            chunks = str(self.n_chunks)
+            if fwd.chunk_clamped:
+                chunks += f" (clamped from {fwd.n_chunks_requested})"
+        else:
+            # Heterogeneous per-hop schedule: show every hop's depth and
+            # any per-hop clamps against the original ask.
+            chunks = f"per-hop {fwd.chunk_schedule}"
+            if fwd.chunk_clamped:
+                chunks += (f" (clamped from {fwd.chunk_schedule_requested}"
+                           f" at hop"
+                           f"{'s' if len(fwd.hop_clamps) > 1 else ''} "
+                           + ",".join(str(i) for i, _, _ in fwd.hop_clamps)
+                           + ")")
+        inv = self._inv_spec
+        if inv.chunk_schedule[::-1] != fwd.chunk_schedule:
             # e.g. a chunked slab whose inverse has no legal chunk dim
-            chunks += f", inverse={self._inv_spec.n_chunks}"
+            if inv.uniform_chunks:
+                chunks += f", inverse={inv.n_chunks}"
+            else:
+                chunks += f", inverse per-hop {inv.chunk_schedule}"
         lines = [
             f"DistributedFFT(grid={self.grid}, kinds={self.kinds}, "
             f"batch={self.batch_shape}, dtype={self.dtype.name})",
@@ -367,11 +388,12 @@ def plan_fft(mesh: Mesh, grid: Sequence[int], *,
              kinds: Optional[Sequence[str]] = None,
              batch_shape: Sequence[int] = (), dtype=None,
              decomp: Optional[str] = None, backend: Optional[str] = None,
-             n_chunks: Optional[int] = None,
+             n_chunks=None,
              mesh_axes: Optional[Sequence[str]] = None,
              dim_groups: Optional[Sequence[Sequence[int]]] = None,
              tuning: str = "off",
              tune_cache: Optional[TuningCache] = None,
+             tune_objective: str = "forward",
              precompiled: bool = True) -> DistributedFFT:
     """Build a :class:`DistributedFFT` plan for the trailing ``len(grid)``
     dims of ``batch_shape + grid``-shaped operands.
@@ -387,6 +409,16 @@ def plan_fft(mesh: Mesh, grid: Sequence[int], *,
     to "pencil" on meshes with enough axes and to "hybrid" otherwise — a
     4-D grid on a 2-axis mesh plans out of the box as two 2-dim slab
     stages with one transpose, where a pencil would demand 3 axes.
+
+    ``n_chunks`` is an int (uniform overlap depth on every redistribution
+    hop) or a per-hop sequence — one entry per hop, forward hop order —
+    giving each hop its own chunk count (e.g. ``n_chunks=(4, 2)`` for a
+    3-stage pencil whose first transpose overlaps deeper than its second).
+    Infeasible entries clamp per hop, recorded on the spec and reported by
+    ``describe()``.  The tuner searches per-hop schedules on its own (the
+    scheduler policy engine proposes them); ``tune_objective`` selects what
+    auto-tuning measures ("forward", or the joint "fwd+scale+inv" round
+    trip the :class:`PoissonSolver` runs).
     """
     grid = tuple(int(n) for n in grid)
     ndim = len(grid)
@@ -423,7 +455,14 @@ def plan_fft(mesh: Mesh, grid: Sequence[int], *,
             decomp = ("pencil" if len(mesh.axis_names) >= ndim - 1
                       else "hybrid")
     backend = backend if backend is not None else "xla"
-    n_chunks = n_chunks if n_chunks is not None else 1
+    chunk_schedule = None
+    if n_chunks is None:
+        n_chunks = 1
+    elif not isinstance(n_chunks, int):
+        # A per-hop schedule (forward hop order); validated against the
+        # decomposition's hop count by make_spec below.
+        chunk_schedule = tuple(int(c) for c in n_chunks)
+        n_chunks = max(chunk_schedule) if chunk_schedule else 1
     if dim_groups is not None:
         dim_groups = tuple(tuple(int(d) for d in g) for g in dim_groups)
         if decomp != "hybrid":
@@ -435,22 +474,28 @@ def plan_fft(mesh: Mesh, grid: Sequence[int], *,
         axes = (tuple(mesh_axes) if mesh_axes
                 else _default_fft_axes(mesh, decomp, ndim))
         default = Candidate(decomp=decomp, mesh_axes=axes, backend=backend,
-                            n_chunks=n_chunks, dim_groups=dim_groups)
+                            n_chunks=n_chunks, dim_groups=dim_groups,
+                            chunk_schedule=chunk_schedule)
     tuned = resolve_tuned_plan(grid, mesh, kinds=kinds, dtype=dtype,
                                inverse=False, batch_shape=batch_shape,
                                mode=tuning, cache=tune_cache,
-                               default=default)
+                               default=default, objective=tune_objective)
 
     dec = make_decomposition(tuned.decomp, tuned.mesh_axes, ndim,
                              dim_groups=tuned.dim_groups)
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     batch_spec = (None,) * len(batch_shape)
+    spec_chunks = (tuned.chunk_schedule if tuned.chunk_schedule is not None
+                   else tuned.n_chunks)
     fwd_spec = make_spec(mesh, grid, dec, kinds, backend=tuned.backend,
-                         n_chunks=tuned.n_chunks, inverse=False,
+                         n_chunks=spec_chunks, inverse=False,
                          batch_spec=batch_spec)
     validate_grid(dec, fwd_spec.eff_grid, axis_sizes)
+    # The same forward-order schedule drives the inverse spec; make_spec
+    # reverses it to the inverse's execution order and re-clamps per hop
+    # (an inverse hop can have different legal chunk dims).
     inv_spec = make_spec(mesh, grid, dec, kinds, backend=tuned.backend,
-                         n_chunks=tuned.n_chunks, inverse=True,
+                         n_chunks=spec_chunks, inverse=True,
                          batch_spec=batch_spec)
     return DistributedFFT(mesh, fwd_spec, inv_spec, batch_shape=batch_shape,
                           dtype=dtype, tuned=tuned, tuning=tuning,
@@ -514,6 +559,8 @@ def _wrapper_plan(mesh: Mesh, grid, kinds, batch_shape, dtype, decomp,
     # The cache object itself is part of the key: TuningCache hashes by
     # identity, and holding the reference keeps its id from being recycled
     # onto a different cache while the memoized plan exists.
+    if n_chunks is not None and not isinstance(n_chunks, int):
+        n_chunks = tuple(int(c) for c in n_chunks)  # hashable schedule
     key = ("fft", mesh, tuple(grid), tuple(kinds), tuple(batch_shape),
            str(jnp.dtype(dtype)), decomp, backend, n_chunks,
            tuple(mesh_axes) if mesh_axes is not None else None, tuning,
@@ -528,7 +575,7 @@ def _wrapper_plan(mesh: Mesh, grid, kinds, batch_shape, dtype, decomp,
 def fftnd(x: jax.Array, *, mesh: Mesh, ndim: Optional[int] = None,
           decomp: Optional[str] = None,
           kinds: Optional[Sequence[str]] = None,
-          backend: Optional[str] = None, n_chunks: Optional[int] = None,
+          backend: Optional[str] = None, n_chunks=None,
           mesh_axes: Optional[Sequence[str]] = None, tuning: str = "off",
           tune_cache: Optional[TuningCache] = None,
           precompiled: bool = True) -> jax.Array:
@@ -559,7 +606,7 @@ def ifftnd(x: jax.Array, *, mesh: Mesh, ndim: Optional[int] = None,
            grid: Optional[Tuple[int, ...]] = None,
            decomp: Optional[str] = None,
            kinds: Optional[Sequence[str]] = None,
-           backend: Optional[str] = None, n_chunks: Optional[int] = None,
+           backend: Optional[str] = None, n_chunks=None,
            mesh_axes: Optional[Sequence[str]] = None, tuning: str = "off",
            tune_cache: Optional[TuningCache] = None,
            precompiled: bool = True) -> jax.Array:
@@ -637,9 +684,14 @@ class PoissonSolver:
     Fig. 8.  One :class:`DistributedFFT` plan serves both directions — a
     single tuning resolution per topology, not two tuner hits per call —
     and the eigenvalue array is computed once and cached per spectral
-    dtype.  ``solve`` accepts ``sharded_in=``/``donate=`` like the plan it
-    wraps; the spectral scale-and-inverse runs on the forward output's
-    native sharding.
+    dtype.  Tuning is **joint**: the solver tunes under the
+    ``fwd+scale+inv`` objective, so auto mode measures each candidate on
+    the full round trip it will actually run (its own wisdom key), and the
+    forward winner's stage-0 layout is reused by the paired inverse — no
+    relayout can appear between the forward output and the inverse input.
+    ``solve`` accepts ``sharded_in=``/``donate=`` like the plan it wraps;
+    the spectral scale-and-inverse runs on the forward output's native
+    sharding.
     """
 
     def __init__(self, mesh: Mesh, grid: Sequence[int], *,
@@ -666,6 +718,7 @@ class PoissonSolver:
                              decomp=decomp, backend=backend,
                              n_chunks=n_chunks, mesh_axes=mesh_axes,
                              tuning=tuning, tune_cache=tune_cache,
+                             tune_objective="fwd+scale+inv",
                              precompiled=precompiled)
         lams = [poisson_eigenvalues(n, l, t)
                 for n, l, t in zip(grid, self.lengths, self.topology)]
@@ -686,7 +739,9 @@ class PoissonSolver:
 
     def describe(self) -> str:
         topo = "x".join(t[0].upper() for t in self.topology)
-        return f"PoissonSolver(topology={topo})\n{self.plan.describe()}"
+        return (f"PoissonSolver(topology={topo}, "
+                f"tuning=joint fwd+scale+inv, single resolution)\n"
+                f"{self.plan.describe()}")
 
     def solve(self, rhs: jax.Array, *, sharded_in: bool = False,
               donate: bool = False) -> jax.Array:
@@ -729,6 +784,8 @@ def poisson_solve(rhs: jax.Array, *, mesh: Mesh,
     batch_shape = tuple(rhs.shape[:-3])
     kinds = tuple("fft" if t == "periodic" else "dct2" for t in topology)
     dtype = _forward_plan_dtype(rhs.dtype, kinds)
+    if n_chunks is not None and not isinstance(n_chunks, int):
+        n_chunks = tuple(int(c) for c in n_chunks)  # hashable schedule
     key = ("poisson", mesh, grid, tuple(topology), tuple(lengths),
            batch_shape, str(jnp.dtype(dtype)), decomp, backend, n_chunks,
            tuple(mesh_axes) if mesh_axes is not None else None, tuning,

@@ -13,10 +13,11 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from .decomp import Decomposition, local_shape
 from .redistribute import hop_move_shapes, transpose_cost_bytes
+from .scheduler import CostModel, TaskSpec, hop_phase_time
 
 
 @dataclasses.dataclass(frozen=True)
@@ -275,13 +276,93 @@ def chunk_overlap_fraction(n_chunks: int) -> float:
     return (n_chunks - 1) / n_chunks
 
 
+def stage_comp_times(grid: Tuple[int, ...], decomp: Decomposition,
+                     axis_sizes: Dict[str, int], machine, *,
+                     backend: str = "xla", dtype_bytes: int = 8,
+                     kinds: Optional[Sequence[str]] = None,
+                     eff_grid: Optional[Tuple[int, ...]] = None
+                     ) -> List[float]:
+    """Per-stage local compute time (kind-aware roofline), one per stage."""
+    prof = as_profile(machine)
+    kinds = tuple(kinds) if kinds is not None else ("fft",) * len(grid)
+    eff = tuple(eff_grid) if eff_grid is not None else tuple(grid)
+    ranks = 1
+    for a in decomp.mesh_axes:
+        ranks *= axis_sizes[a]
+    rate = prof.flops_for(backend)
+    times = []
+    for stage in decomp.stages:
+        flops = 0.0
+        for d in stage.fft_dims:
+            family = KIND_FAMILY.get(kinds[d], "c2c")
+            # kind_scale is measured against the XLA backend's analytic
+            # ratios (calibrate() benches rfft/dct2 on "xla"); applying it
+            # to matmul — whose kind_dim_flops already charges e.g. the
+            # full C2C for rfft — would double-count.  Matmul's measured
+            # correction lives entirely in backend_flops.
+            scale = prof.scale_for(family) if backend == "xla" else 1.0
+            flops += kind_dim_flops(eff, grid, d, kinds[d], backend) * scale
+        shape = local_shape(stage, eff, axis_sizes)
+        touched = 2 * dtype_bytes
+        for s in shape:
+            touched *= s
+        times.append(max(flops / ranks / rate, touched / prof.eff_mem_bw))
+    return times
+
+
+def hop_cost_terms(grid: Tuple[int, ...], decomp: Decomposition,
+                   axis_sizes: Dict[str, int], machine, *,
+                   backend: str = "xla", dtype_bytes: int = 8,
+                   kinds: Optional[Sequence[str]] = None,
+                   eff_grid: Optional[Tuple[int, ...]] = None,
+                   stage_times: Optional[Sequence[float]] = None
+                   ) -> List[Tuple[float, float, float, float]]:
+    """Per forward hop: ``(t_comp_next, t_comm_beta, alpha_round, msgs)``.
+
+    The inputs of the scheduler's chunk-schedule policy engine
+    (``scheduler.choose_chunk_schedule``) and of the per-hop pricing path
+    of :func:`predict_plan_time`: ``t_comp_next`` is the downstream
+    stage's local FFT time (the work a chunked hop can hide),
+    ``t_comm_beta`` the hop's bandwidth term over its moves' calibrated
+    per-mesh-axis ``beta``, ``alpha_round`` the latency cost of one chunk
+    round (``alpha * (peers - 1)`` summed over moves, so
+    ``T_comm(k) = beta + alpha_round * k``), and ``msgs`` the messages per
+    chunk round.  Hybrid multi-move hops are priced on the block each
+    ``all_to_all`` actually ships (``hop_move_shapes``).  Callers that
+    already hold :func:`stage_comp_times`' result pass it as
+    ``stage_times`` to avoid recomputing the per-stage roofline (the
+    tuner's ranking pass runs this once per candidate).
+    """
+    prof = as_profile(machine)
+    eff = tuple(eff_grid) if eff_grid is not None else tuple(grid)
+    stage_t = (list(stage_times) if stage_times is not None
+               else stage_comp_times(grid, decomp, axis_sizes, prof,
+                                     backend=backend,
+                                     dtype_bytes=dtype_bytes,
+                                     kinds=kinds, eff_grid=eff_grid))
+    terms = []
+    for i, hop in enumerate(decomp.redists):
+        start = local_shape(decomp.stages[i], eff, axis_sizes)
+        beta = alpha = msgs = 0.0
+        for mv, shape in hop_move_shapes(hop, start, axis_sizes):
+            peers = axis_sizes[mv.mesh_axis]
+            vol = transpose_cost_bytes(shape, dtype_bytes, peers)
+            beta += vol / prof.bw_for(mv.mesh_axis)
+            alpha += prof.alpha_for(mv.mesh_axis) * (peers - 1)
+            msgs += peers - 1
+        terms.append((stage_t[i + 1], beta, alpha, msgs))
+    return terms
+
+
 def predict_plan_time(grid: Tuple[int, ...], decomp: Decomposition,
                       axis_sizes: Dict[str, int], machine, *,
                       backend: str = "xla", n_chunks: int = 1,
                       dtype_bytes: int = 8,
                       sched_overhead_s: float = 0.0,
                       kinds: Optional[Sequence[str]] = None,
-                      eff_grid: Optional[Tuple[int, ...]] = None
+                      eff_grid: Optional[Tuple[int, ...]] = None,
+                      chunk_schedule: Optional[Sequence[int]] = None,
+                      cost_model: Optional[CostModel] = None
                       ) -> Dict[str, float]:
     """LogP/roofline prediction for one *candidate plan* (tuner pruning).
 
@@ -299,6 +380,14 @@ def predict_plan_time(grid: Tuple[int, ...], decomp: Decomposition,
     C2C-on-the-logical-grid model.  ``machine`` may be a bare
     :class:`Machine` or a calibrated :class:`MachineProfile` (per-backend
     flops, per-kind-family scales, per-mesh-axis alpha/beta).
+
+    With a per-hop ``chunk_schedule`` (forward hop order, one entry per
+    ``RedistHop``) the prediction switches to **hop-by-hop pricing**: each
+    phase (hop + downstream stage) is ``scheduler.hop_phase_time`` at its
+    *own* chunk count — the exact objective the scheduler's policy engine
+    argmins per hop — so asymmetric schedules are priced on what each hop
+    actually does instead of one global overlap fraction.  ``n_chunks`` is
+    ignored when a schedule is given.
     """
     prof = as_profile(machine)
     kinds = tuple(kinds) if kinds is not None else ("fft",) * len(grid)
@@ -308,38 +397,51 @@ def predict_plan_time(grid: Tuple[int, ...], decomp: Decomposition,
     for a in decomp.mesh_axes:
         ranks *= axis_sizes[a]
 
-    rate = prof.flops_for(backend)
-    t_comp = 0.0
-    for stage in decomp.stages:
-        flops = 0.0
-        for d in stage.fft_dims:
-            family = KIND_FAMILY.get(kinds[d], "c2c")
-            # kind_scale is measured against the XLA backend's analytic
-            # ratios (calibrate() benches rfft/dct2 on "xla"); applying it
-            # to matmul — whose kind_dim_flops already charges e.g. the
-            # full C2C for rfft — would double-count.  Matmul's measured
-            # correction lives entirely in backend_flops.
-            scale = prof.scale_for(family) if backend == "xla" else 1.0
-            flops += kind_dim_flops(eff, grid, d, kinds[d], backend) * scale
-        shape = local_shape(stage, eff, axis_sizes)
-        touched = 2 * dtype_bytes
-        for s in shape:
-            touched *= s
-        t_comp += max(flops / ranks / rate, touched / prof.eff_mem_bw)
+    stage_t = stage_comp_times(grid, decomp, axis_sizes, prof,
+                               backend=backend, dtype_bytes=dtype_bytes,
+                               kinds=kinds, eff_grid=eff)
+    t_comp = sum(stage_t)
+    hop_terms = hop_cost_terms(grid, decomp, axis_sizes, prof,
+                               backend=backend, dtype_bytes=dtype_bytes,
+                               kinds=kinds, eff_grid=eff,
+                               stage_times=stage_t)
+
+    if chunk_schedule is not None:
+        sched = tuple(max(int(k), 1) for k in chunk_schedule)
+        if len(sched) != len(hop_terms):
+            raise ValueError(
+                f"chunk_schedule {sched} has {len(sched)} entries for "
+                f"{len(hop_terms)} hops of {decomp.name}")
+        cm = cost_model if cost_model is not None else CostModel()
+        # tau_s: Eq. 5 at zero transfer volume — the chunk's bytes are
+        # already in the beta term; same rule as choose_chunk_schedule.
+        tau_s = cm.steal_cost(TaskSpec(data_bytes=0))
+        t_comm = 0.0
+        n_msgs = 0.0
+        total = stage_t[0]
+        for (t_next, beta, alpha, msgs), k in zip(hop_terms, sched):
+            t_comm += beta + alpha * k
+            n_msgs += msgs * k
+            total += hop_phase_time(t_next, beta, alpha, k, tau_s=tau_s,
+                                    overlap_floor=prof.overlap)
+        overlap = max([prof.overlap]
+                      + [chunk_overlap_fraction(k) for k in sched])
+        return {
+            "t_comp_s": t_comp,
+            "t_comm_s": t_comm,
+            "t_total_s": total + sched_overhead_s,
+            "t_sched_s": sched_overhead_s,
+            "messages": n_msgs,
+            "ranks": ranks,
+            "overlap": overlap,
+            "chunk_schedule": sched,
+        }
 
     t_comm = 0.0
     n_msgs = 0.0
-    for stage, hop in zip(decomp.stages, decomp.redists):
-        # A hybrid hop chains several all_to_alls whose operand shapes
-        # thread into each other; price each move on the block it actually
-        # ships rather than assuming the single-move pencil/slab shape.
-        start = local_shape(stage, eff, axis_sizes)
-        for mv, shape in hop_move_shapes(hop, start, axis_sizes):
-            peers = axis_sizes[mv.mesh_axis]
-            vol = transpose_cost_bytes(shape, dtype_bytes, peers)
-            t_comm += (prof.alpha_for(mv.mesh_axis) * (peers - 1) * n_chunks
-                       + vol / prof.bw_for(mv.mesh_axis))
-            n_msgs += (peers - 1) * n_chunks
+    for _, beta, alpha, msgs in hop_terms:
+        t_comm += beta + alpha * n_chunks
+        n_msgs += msgs * n_chunks
 
     overlap = max(prof.overlap, chunk_overlap_fraction(n_chunks))
     bulk = t_comp + t_comm

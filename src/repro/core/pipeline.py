@@ -7,7 +7,14 @@
 
 Every stage owns its own layout (``decomp.stages[i]``) — the stage-specific
 DArray idea — and every redistribution is an ``all_to_all`` that may be
-chunk-pipelined for compute/communication overlap (``n_chunks > 1``).
+chunk-pipelined for compute/communication overlap.  The overlap depth is a
+*per-hop* ``chunk_schedule`` (one entry per ``RedistHop``): a uniform int
+``n_chunks`` is the legacy special case, while heterogeneous schedules give
+an asymmetric pipeline (e.g. a hybrid 4-D plan whose first hop moves more
+volume than its second) a different chunk count on each hop.  The
+scheduler's policy engine (``scheduler.choose_chunk_schedule``) picks the
+schedule from the calibrated cost model; ``make_spec`` clamps infeasible
+entries per hop and records the ask.
 
 R2C transforms pad the frequency dim up to the LCM of the mesh-axis sizes
 that shard it downstream, so every stage keeps integral local shapes; the
@@ -45,20 +52,52 @@ class PipelineSpec:
     decomp: Decomposition
     kinds: Tuple[str, ...]              # one transform kind per spatial dim
     backend: str
-    n_chunks: int
+    # One chunk count per RedistHop, in *execution* order (i.e. aligned with
+    # ``stage_order()``'s redists — reversed relative to ``decomp.redists``
+    # for inverse specs).  A uniform legacy ``n_chunks=k`` is the schedule
+    # ``(k,) * n_hops``; heterogeneous schedules give each hop its own
+    # overlap depth.
+    chunk_schedule: Tuple[int, ...]
     inverse: bool
     batch_spec: Tuple[Optional[str], ...]  # shardings of leading batch dims
-    n_chunks_requested: int = 0         # pre-clamp ask (0 = same as n_chunks)
+    # Pre-clamp ask per hop, execution order (() = nothing was requested).
+    chunk_schedule_requested: Tuple[int, ...] = ()
 
     @property
     def spatial_offset(self) -> int:
         return len(self.batch_spec)
 
     @property
+    def n_chunks(self) -> int:
+        """Back-compat scalar view of the schedule: the deepest hop."""
+        return max(self.chunk_schedule, default=1)
+
+    @property
+    def n_chunks_requested(self) -> int:
+        """Back-compat scalar view of the pre-clamp ask (0 = none)."""
+        return max(self.chunk_schedule_requested, default=0)
+
+    @property
+    def uniform_chunks(self) -> bool:
+        """True when both the ask and the schedule are hop-uniform."""
+        return (len(set(self.chunk_schedule)) <= 1
+                and len(set(self.chunk_schedule_requested)) <= 1)
+
+    @property
     def chunk_clamped(self) -> bool:
-        """True when the requested chunk count was clamped at spec time."""
-        return (self.n_chunks_requested != 0
-                and self.n_chunks_requested != self.n_chunks)
+        """True when some requested chunk count was clamped at spec time."""
+        return (self.chunk_schedule_requested != ()
+                and self.chunk_schedule_requested != self.chunk_schedule)
+
+    @property
+    def hop_clamps(self) -> Tuple[Tuple[int, int, int], ...]:
+        """Per clamped hop: (hop index, requested, effective), exec order."""
+        if not self.chunk_schedule_requested:
+            return ()
+        return tuple((i, ask, got) for i, (ask, got)
+                     in enumerate(zip(self.chunk_schedule_requested,
+                                      self.chunk_schedule))
+                     if ask != got)
 
     def stage_order(self):
         stages = list(self.decomp.stages)
@@ -141,25 +180,50 @@ def chunk_sites(spec: "PipelineSpec", axis_sizes: dict
 
 def make_spec(mesh: Mesh, grid: Tuple[int, ...], decomp: Decomposition,
               kinds: Tuple[str, ...], *, backend: str = "xla",
-              n_chunks: int = 1, inverse: bool = False,
+              n_chunks=1, inverse: bool = False,
               batch_spec: Tuple[Optional[str], ...] = ()) -> PipelineSpec:
-    """Build a :class:`PipelineSpec`, clamping an infeasible chunk count.
+    """Build a :class:`PipelineSpec`, clamping infeasible chunk counts.
 
-    A requested ``n_chunks`` that does not divide some hop's chunk-dim
-    local size is clamped to the largest count that divides them all (the
-    clamp is recorded: ``spec.n_chunks_requested`` keeps the ask and
-    ``describe()`` reports it), so a tuner- or user-selected chunk count
-    never aborts the plan on an odd grid.
+    ``n_chunks`` is either an int — a *uniform* schedule, clamped (legacy
+    behaviour) to the largest count dividing every hop's chunk-dim size —
+    or a per-hop sequence in **forward hop order** (``decomp.redists``
+    order, regardless of ``inverse``), clamped hop-by-hop via the same
+    ``chunk_sites``/``largest_divisor_at_most`` machinery ``redistribute``
+    uses at trace time.  Every clamp is recorded
+    (``spec.chunk_schedule_requested`` keeps the ask; ``describe()``
+    reports it), so a tuner- or user-selected chunk count never aborts the
+    plan on an odd grid.
     """
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     eff = effective_grid(tuple(grid), decomp, axis_sizes, tuple(kinds))
+    n_hops = len(decomp.redists)
+    if isinstance(n_chunks, int):
+        uniform = True
+        requested = (max(int(n_chunks), 1),) * n_hops
+    else:
+        uniform = False
+        sched = tuple(int(c) for c in n_chunks)
+        if len(sched) != n_hops:
+            raise ValueError(
+                f"chunk schedule {sched} has {len(sched)} entries but "
+                f"{decomp.name} over grid {tuple(grid)} has {n_hops} "
+                f"redistribution hops")
+        if any(c < 1 for c in sched):
+            raise ValueError(f"chunk schedule entries must be >= 1: {sched}")
+        # The schedule is given in forward hop order; inverse pipelines
+        # execute the hops LIFO, so entry i pairs with executed hop
+        # n_hops-1-i (the hop-aware inversion of the schedule).
+        requested = sched if not inverse else sched[::-1]
     spec = PipelineSpec(grid=tuple(grid), eff_grid=tuple(eff), decomp=decomp,
                         kinds=tuple(kinds), backend=backend,
-                        n_chunks=n_chunks, inverse=inverse,
+                        chunk_schedule=requested, inverse=inverse,
                         batch_spec=tuple(batch_spec),
-                        n_chunks_requested=n_chunks)
-    if n_chunks > 1:
-        sites = chunk_sites(spec, axis_sizes)
+                        chunk_schedule_requested=requested)
+    if all(c <= 1 for c in requested):
+        return spec
+    sites = chunk_sites(spec, axis_sizes)
+    if uniform:
+        ask = requested[0]
         sizes = [s for _, s in sites if s is not None]
         if sites and all(d is None for d, _ in sites):
             # No hop can legally chunk (e.g. an inverse slab: the hop plus
@@ -170,22 +234,45 @@ def make_spec(mesh: Mesh, grid: Tuple[int, ...], decomp: Decomposition,
                 f"no redistribution of grid {tuple(grid)} has a legal "
                 f"chunk dim ({'inverse' if inverse else 'forward'} "
                 f"{decomp.name}); running bulk instead of "
-                f"n_chunks={n_chunks}", RuntimeWarning, stacklevel=2)
-            spec = dataclasses.replace(spec, n_chunks=1)
+                f"n_chunks={ask}", RuntimeWarning, stacklevel=2)
+            clamped = (1,) * n_hops
         else:
-            # Largest count <= n_chunks dividing every hop's chunk-dim
-            # size == the largest divisor of their gcd (same helper
-            # redistribute uses for its per-hop trace-time clamp, so the
-            # two sites agree).
-            eff_chunks = (largest_divisor_at_most(math.gcd(*sizes), n_chunks)
-                          if sizes else n_chunks)
-            if eff_chunks != n_chunks:
+            # A uniform ask stays uniform: the largest count <= n_chunks
+            # dividing every hop's chunk-dim size == the largest divisor
+            # of their gcd (same helper redistribute uses for its per-hop
+            # trace-time clamp, so the two sites agree).
+            eff_chunks = (largest_divisor_at_most(math.gcd(*sizes), ask)
+                          if sizes else ask)
+            if eff_chunks != ask:
                 warnings.warn(
-                    f"n_chunks={n_chunks} does not evenly chunk every "
+                    f"n_chunks={ask} does not evenly chunk every "
                     f"redistribution of grid {tuple(grid)} on this mesh; "
                     f"clamped to {eff_chunks}", RuntimeWarning, stacklevel=2)
-                spec = dataclasses.replace(spec, n_chunks=eff_chunks)
-    return spec
+            clamped = (eff_chunks,) * n_hops
+    else:
+        # Per-hop schedule: clamp each entry independently against its own
+        # hop's chunk site.  A hop with no legal chunk dim runs bulk; an
+        # unknown batch-dim extent is left to redistribute's trace-time
+        # clamp (the spec cannot know the size).
+        per_hop = []
+        for (d, size), ask in zip(sites, requested):
+            if ask <= 1:
+                per_hop.append(ask)
+            elif d is None:
+                per_hop.append(1)
+            elif size is None:
+                per_hop.append(ask)
+            else:
+                per_hop.append(largest_divisor_at_most(size, ask))
+        clamped = tuple(per_hop)
+        if clamped != requested:
+            show = (lambda s: tuple(s) if not inverse else tuple(s[::-1]))
+            warnings.warn(
+                f"chunk schedule {show(requested)} is not feasible on every "
+                f"redistribution of grid {tuple(grid)} on this mesh; "
+                f"clamped per hop to {show(clamped)}",
+                RuntimeWarning, stacklevel=2)
+    return dataclasses.replace(spec, chunk_schedule=clamped)
 
 
 def _stage_transform(spec: PipelineSpec, stage: StageLayout,
@@ -235,9 +322,12 @@ def _local_pipeline(spec: PipelineSpec) -> Callable:
             # The chunk dim must dodge the fused transform's dims, or the
             # per-chunk FFT would run over a split dim (the inverse-slab
             # bug); redistribute falls back to bulk when none is legal.
+            # Each hop runs at its own schedule entry (chunk_schedule is
+            # stored in execution order, so it indexes like ``redists``).
             avoid = tuple(d + off for d in nxt_stage.fft_dims)
-            x = redistribute(x, hop, n_chunks=spec.n_chunks, then=nxt,
-                             spatial_offset=off, avoid_dims=avoid)
+            x = redistribute(x, hop, n_chunks=spec.chunk_schedule[i],
+                             then=nxt, spatial_offset=off, avoid_dims=avoid,
+                             hop_index=i)
         return x
 
     return run
@@ -309,7 +399,9 @@ def compile_pipeline(mesh: Mesh, spec: PipelineSpec,
                    + (spec.decomp.dim_groups,),
                    mesh_shape=tuple(mesh.devices.shape),
                    mesh_axes=tuple(mesh.axis_names), backend=spec.backend,
-                   n_chunks=spec.n_chunks, inverse=spec.inverse,
+                   # The full per-hop schedule, not a scalar summary: two
+                   # plans whose schedules differ compile differently.
+                   n_chunks=spec.chunk_schedule, inverse=spec.inverse,
                    extra=(tuple(batch_shape), bool(donate)))
 
     def builder():

@@ -139,6 +139,13 @@ class TunedPlan:
     # Hybrid schedules are distinguished by their stage grouping of the
     # spatial dims; None for pencil/slab (and for pre-hybrid wisdom files).
     dim_groups: Optional[Tuple[Tuple[int, ...], ...]] = None
+    # Per-hop chunk schedule (forward hop order); None means the uniform
+    # ``n_chunks`` applies to every hop — which is also how pre-schedule
+    # wisdom entries (int-valued ``n_chunks``, no schedule key) read back.
+    chunk_schedule: Optional[Tuple[int, ...]] = None
+    # What the tuner measured: "forward" (one transform) or
+    # "fwd+scale+inv" (the PoissonSolver-style joint round trip).
+    objective: str = "forward"
 
     def to_json(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -147,11 +154,18 @@ class TunedPlan:
             d.pop("dim_groups")
         else:
             d["dim_groups"] = [list(g) for g in self.dim_groups]
+        if self.chunk_schedule is None:
+            d.pop("chunk_schedule")
+        else:
+            d["chunk_schedule"] = [int(c) for c in self.chunk_schedule]
+        if self.objective == "forward":
+            d.pop("objective")  # keep pre-objective files byte-compatible
         return d
 
     @classmethod
     def from_json(cls, d: Dict[str, Any]) -> "TunedPlan":
         groups = d.get("dim_groups")
+        sched = d.get("chunk_schedule")
         return cls(decomp=d["decomp"], mesh_axes=tuple(d["mesh_axes"]),
                    backend=d["backend"], n_chunks=int(d["n_chunks"]),
                    predicted_s=float(d.get("predicted_s", 0.0)),
@@ -160,7 +174,10 @@ class TunedPlan:
                    baseline_s=float(d.get("baseline_s", 0.0)),
                    ts=float(d.get("ts", 0.0)),
                    dim_groups=(tuple(tuple(int(x) for x in g) for g in groups)
-                               if groups is not None else None))
+                               if groups is not None else None),
+                   chunk_schedule=(tuple(int(c) for c in sched)
+                                   if sched is not None else None),
+                   objective=str(d.get("objective", "forward")))
 
     def describe(self) -> str:
         """One-line human-readable account of this decision and its timings.
@@ -171,8 +188,12 @@ class TunedPlan:
         """
         from .decomp import describe_decomp  # deferred: keep plan.py light
         decomp = describe_decomp(self.decomp, self.dim_groups)
+        chunks = (",".join(map(str, self.chunk_schedule))
+                  if self.chunk_schedule is not None else str(self.n_chunks))
         head = (f"{decomp}({','.join(self.mesh_axes)})/{self.backend}"
-                f"/chunks={self.n_chunks}")
+                f"/chunks={chunks}")
+        if self.objective != "forward":
+            head += f" [{self.objective}]"
         if self.source == "measured":
             return (f"{head} [measured {self.measured_s * 1e3:.3f} ms, "
                     f"predicted {self.predicted_s * 1e3:.3f} ms, "
@@ -185,11 +206,15 @@ class TunedPlan:
 def tuning_key(*, grid: Sequence[int], mesh_shape: Sequence[int],
                mesh_axes: Sequence[str], kinds: Sequence[str], dtype: str,
                inverse: bool, batch_shape: Sequence[int] = (),
-               platform: str = "") -> str:
+               platform: str = "", op: str = "fft") -> str:
     """Stable string key for one tuning problem (usable as a JSON key).
 
     ``platform`` (e.g. "cpu"/"tpu") keeps wisdom tuned on one device kind
-    from being served to another via the shared on-disk cache.
+    from being served to another via the shared on-disk cache.  ``op``
+    names the measured operation; the default "fft" (a single forward
+    transform) is omitted so pre-existing wisdom keys stay valid, while
+    e.g. the PoissonSolver's joint "fwd+scale+inv" objective gets its own
+    key space and can never shadow a forward-only plan.
     """
     parts = [
         "grid=" + ",".join(map(str, grid)),
@@ -201,6 +226,8 @@ def tuning_key(*, grid: Sequence[int], mesh_shape: Sequence[int],
         "batch=" + ",".join(map(str, batch_shape)),
         "plat=" + platform,
     ]
+    if op != "fft":
+        parts.append("op=" + op)
     return ";".join(parts)
 
 
@@ -401,7 +428,9 @@ def global_tuning_cache() -> TuningCache:
 
 def plan_key(*, kind: Tuple[str, ...], grid: Tuple[int, ...], dtype: str,
              decomp: Hashable, mesh_shape: Tuple[int, ...],
-             mesh_axes: Tuple[str, ...], backend: str, n_chunks: int,
+             mesh_axes: Tuple[str, ...], backend: str, n_chunks: Hashable,
              inverse: bool, extra: Optional[Hashable] = None) -> Hashable:
+    """``n_chunks`` may be an int or a full per-hop chunk-schedule tuple —
+    either way it is part of the compiled artifact's identity."""
     return (kind, grid, dtype, decomp, mesh_shape, mesh_axes, backend,
             n_chunks, inverse, extra)

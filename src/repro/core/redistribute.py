@@ -79,7 +79,8 @@ def redistribute(block: jax.Array, hop, *,
                  n_chunks: int = 1,
                  then: Optional[Callable[[jax.Array], jax.Array]] = None,
                  spatial_offset: int = 0,
-                 avoid_dims: Sequence[int] = ()) -> jax.Array:
+                 avoid_dims: Sequence[int] = (),
+                 hop_index: Optional[int] = None) -> jax.Array:
     """Run one redistribution hop inside a ``shard_map`` body.
 
     ``block`` is the local shard; ``spatial_offset`` is the number of
@@ -88,9 +89,14 @@ def redistribute(block: jax.Array, hop, *,
     ``Redistribution`` is accepted and wrapped).  ``then`` is the next
     stage's local transform, fused per-chunk when ``n_chunks > 1`` (the
     overlap pipeline); ``avoid_dims`` are the absolute dims that transform
-    touches, which the chunk dim must avoid.
+    touches, which the chunk dim must avoid.  ``n_chunks`` is this hop's
+    entry of the pipeline's per-hop ``chunk_schedule`` — each hop chooses
+    its own chunk dim and clamps its own count, so heterogeneous schedules
+    need no coordination here.  ``hop_index`` only labels the trace-time
+    warnings (``pipeline.make_spec`` records spec-time clamps).
     """
     hop = _as_hop(hop)
+    tag = f"hop {hop_index}" if hop_index is not None else "this hop"
 
     def a2a(x: jax.Array) -> jax.Array:
         for mv in hop.moves:
@@ -107,8 +113,8 @@ def redistribute(block: jax.Array, hop, *,
     chunk_dim = free_chunk_dim(hop, block.ndim, spatial_offset, avoid_dims)
     if chunk_dim is None:
         warnings.warn(
-            f"no legal chunk dim for hop over {hop.mesh_axes} (every dim is "
-            f"part of the exchange or of the next stage's transform); "
+            f"no legal chunk dim for {tag} over {hop.mesh_axes} (every dim "
+            f"is part of the exchange or of the next stage's transform); "
             f"running the bulk path instead of n_chunks={n_chunks}",
             RuntimeWarning, stacklevel=2)
         out = a2a(block)
@@ -117,8 +123,8 @@ def redistribute(block: jax.Array, hop, *,
     eff_chunks = largest_divisor_at_most(size, n_chunks)
     if eff_chunks != n_chunks:
         warnings.warn(
-            f"chunk dim {chunk_dim} (size {size}) not divisible by "
-            f"n_chunks={n_chunks}; clamped to {eff_chunks}",
+            f"chunk dim {chunk_dim} (size {size}) of {tag} not divisible "
+            f"by n_chunks={n_chunks}; clamped to {eff_chunks}",
             RuntimeWarning, stacklevel=2)
         if eff_chunks <= 1:
             out = a2a(block)

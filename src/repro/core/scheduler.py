@@ -1,24 +1,38 @@
-"""Locality-aware dynamic task scheduler with work stealing (paper §III-C, Alg. 3).
+"""Dynamic task scheduler AND chunk-schedule policy engine (paper §III-C).
 
-Three cooperating pieces:
+Four cooperating pieces:
 
-* ``place_tasks``        — Alg. 3 verbatim: affinity-argmax placement, then a
+* ``place_tasks``        — Alg. 3: affinity-argmax placement, then a
   variance-triggered rebalancing pass that migrates queued tasks from
-  overloaded to underutilized workers.
+  overloaded to underutilized workers (scanning past an unmovable tail task
+  and across source workers before giving up).
 * ``WorkStealingPool``   — a real thread pool with per-worker deques.  Owners
   pop from the head, thieves steal from the tail, and a steal only happens
   when the predicted idle time exceeds the LogP steal cost
-  (Eq. 5–6: steal iff I_q > tau_s = L + V/B + sigma).  This is the *host*
-  backend of the framework: chunk-level jit'd FFTs release the GIL, so
-  threads genuinely overlap on multi-core hosts.
+  (Eq. 5–6: steal iff I_q > tau_s = L + V/B + sigma).  Victim selection is
+  O(workers): per-deque running cost totals are maintained on every
+  push/pop instead of summing queue costs under the lock per poll.
 * ``ScheduleSimulator``  — a deterministic discrete-event model of the same
   policy, used for scheduling studies on this 1-core container and for the
   paper's Table II / Fig. 6 / Fig. 9 reproductions (per-thread times,
   imbalance %, overhead fractions).
+* ``choose_chunk_schedule`` / ``hop_phase_time`` — the **chunk-schedule
+  policy engine** for the SPMD pipeline.  On TPU the Alg. 3 runtime cannot
+  run on-device (SPMD is static), so the paper's dynamic-scheduling thesis
+  survives here as plan-time policy: for every redistribution hop the
+  engine evaluates Eq. 7,
 
-On TPU none of this runs on-device (SPMD is static — see DESIGN.md §2); the
-scheduler survives as the host-side runtime and as the cost model that picks
-chunk counts for the pipelined redistribution.
+      T_phase(k) ~= max(T_comp, T_comm(k)) + (1-rho) * k * tau_s,
+
+  over the hop's feasible chunk counts ``k`` — ``T_comm(k)`` from
+  ``perfmodel``'s calibrated per-mesh-axis all_to_all alpha/beta terms,
+  ``T_comp`` from the downstream stage's kind-aware FFT cost, ``tau_s``
+  from the LogP :class:`CostModel` (Eq. 5) — and picks each hop's argmin
+  independently.  That yields a *per-hop heterogeneous*
+  ``PipelineSpec.chunk_schedule`` (an asymmetric hybrid pipeline gets a
+  different overlap depth on each hop), which the tuner enumerates
+  alongside pencil/slab/hybrid and ``perfmodel.predict_plan_time`` prices
+  hop-by-hop with the same formula.
 """
 from __future__ import annotations
 
@@ -102,24 +116,36 @@ def place_tasks(tasks: Sequence[TaskSpec], n_workers: int,
             return 0.0
         return statistics.pstdev(load) / m
 
-    # Rebalance(sigma, W, L): greedy migration of queued tasks
+    # Rebalance(sigma, W, L): greedy migration of queued tasks.  The tail
+    # of the most-loaded queue is preferred (coldest data), but a tail task
+    # too large to help must not end the pass: cheaper tasks earlier in
+    # that queue — and queues of the next-most-loaded workers — are scanned
+    # before terminating, so one oversized task cannot pin the whole
+    # placement above the variance threshold.
     guard = 0
     while cv() > variance_threshold and guard < 16 * len(tasks) + 16:
         guard += 1
-        src = max(range(n_workers), key=lambda w: load[w])
         dst = min(range(n_workers), key=lambda w: load[w])
-        if not queues[src]:
-            break
-        i = queues[src].pop()  # migrate from the tail (coldest data)
-        t = tasks[i]
-        new_cost = cost_model.placement_cost(t, dst)
-        if load[dst] + new_cost >= load[src]:
-            queues[src].append(i)
-            break  # migration would not help; stop
-        load[src] -= cost_model.placement_cost(t, src)
-        load[dst] += new_cost
-        sigma[i] = dst
-        queues[dst].append(i)
+        moved = False
+        for src in sorted(range(n_workers), key=lambda w: -load[w]):
+            if src == dst or not queues[src]:
+                continue
+            for pos in range(len(queues[src]) - 1, -1, -1):
+                i = queues[src][pos]
+                new_cost = cost_model.placement_cost(tasks[i], dst)
+                if load[dst] + new_cost >= load[src]:
+                    continue  # would not reduce the peak; try an earlier one
+                queues[src].pop(pos)
+                load[src] -= cost_model.placement_cost(tasks[i], src)
+                load[dst] += new_cost
+                sigma[i] = dst
+                queues[dst].append(i)
+                moved = True
+                break
+            if moved:
+                break
+        if not moved:
+            break  # no queued task anywhere can reduce the peak load
     return sigma
 
 
@@ -144,6 +170,12 @@ class WorkStealingPool:
         self.steal = steal
         self.cm = cost_model
         self.deques = [collections.deque() for _ in range(n_workers)]
+        # Running per-deque cost totals, updated on every push/pop: victim
+        # selection is O(workers) instead of O(workers x queue) — idle
+        # workers poll _try_get at ~10 us intervals under the single global
+        # lock, so re-summing every victim's queue per poll serialized the
+        # whole pool on the scan.
+        self._costs = [0.0] * n_workers
         self.lock = threading.Lock()
         self.stats = [WorkerStats() for _ in range(n_workers)]
         self._pending = 0
@@ -152,23 +184,30 @@ class WorkStealingPool:
         w = task.home if worker is None else worker
         with self.lock:
             self.deques[w % self.n].append(task)
+            self._costs[w % self.n] += task.cost
             self._pending += 1
+
+    def queue_costs(self) -> List[float]:
+        """Snapshot of the per-worker queued-cost totals (tests/telemetry)."""
+        with self.lock:
+            return list(self._costs)
 
     def _try_get(self, w: int) -> Optional[Tuple[TaskSpec, bool]]:
         with self.lock:
             if self.deques[w]:
                 self._pending -= 1
-                return self.deques[w].popleft(), False
+                task = self.deques[w].popleft()
+                self._costs[w] -= task.cost
+                return task, False
             if not self.steal:
                 return None
-            # victim = max remaining load (approximated by queue cost sum)
+            # victim = max remaining load (the maintained queue cost sum)
             victim, best_load = -1, 0.0
             for v in range(self.n):
                 if v == w or not self.deques[v]:
                     continue
-                load = sum(t.cost for t in self.deques[v])
-                if load > best_load:
-                    victim, best_load = v, load
+                if self._costs[v] > best_load:
+                    victim, best_load = v, self._costs[v]
             if victim < 0:
                 return None
             t = self.deques[victim][-1]
@@ -178,6 +217,7 @@ class WorkStealingPool:
             if idle_pred <= self.cm.steal_cost(t):
                 return None
             self.deques[victim].pop()
+            self._costs[victim] -= t.cost
             self._pending -= 1
             return t, True
 
@@ -315,3 +355,60 @@ def phase_time(t_comp: float, t_comm: float, k: float, tau_s: float,
                rho: float) -> float:
     """Eq. 7: T_phase ~= max(T_comp, T_comm) + (1-rho) * k * tau_s."""
     return max(t_comp, t_comm) + (1.0 - rho) * k * tau_s
+
+
+# ---------------------------------------------------------------------------
+# Chunk-schedule policy engine (Eq. 7 applied per redistribution hop)
+# ---------------------------------------------------------------------------
+
+def hop_phase_time(t_comp: float, t_comm_beta: float, alpha_round_s: float,
+                   n_chunks: int, *, tau_s: float = 0.0,
+                   overlap_floor: float = 0.0) -> float:
+    """Predicted wall time of one pipelined phase (hop + next stage) at
+    chunk count ``k`` — Eq. 7 on the chunked-overlap pipeline.
+
+    ``t_comp`` is the downstream stage's local FFT time (the work a chunked
+    hop can hide), ``t_comm_beta`` the hop's bandwidth term, and
+    ``alpha_round_s`` the per-chunk-round latency (``alpha * (peers - 1)``
+    summed over the hop's moves), so ``T_comm(k) = beta + alpha_round * k``.
+    Chunking exposes ``rho = (k-1)/k`` overlap (chunk k+1's collective runs
+    under chunk k's FFT), floored by the machine's intrinsic overlap; the
+    unhidden ``(1-rho)`` share of the shorter side remains, and every chunk
+    round pays the Eq. 5 scheduling cost ``tau_s``.
+    """
+    k = max(int(n_chunks), 1)
+    t_comm = t_comm_beta + alpha_round_s * k
+    rho = max(overlap_floor, (k - 1.0) / k if k > 1 else 0.0)
+    return (phase_time(t_comp, t_comm, k, tau_s, rho)
+            + (1.0 - rho) * min(t_comp, t_comm))
+
+
+def choose_chunk_schedule(hop_terms: Sequence[Sequence[float]],
+                          hop_candidates: Sequence[Sequence[int]], *,
+                          cost_model: CostModel = CostModel(),
+                          overlap_floor: float = 0.0) -> Tuple[int, ...]:
+    """Per-hop argmin of :func:`hop_phase_time` — the chunk-schedule policy.
+
+    ``hop_terms[i]`` is ``(t_comp_next_stage_s, t_comm_beta_s,
+    alpha_round_s)`` for hop ``i`` (``perfmodel.hop_cost_terms`` computes
+    them from the calibrated machine profile); ``hop_candidates[i]`` are
+    the chunk counts feasible at that hop (``tuner.feasible_hop_chunk_
+    counts``, built on ``pipeline.chunk_sites``).  Each hop chooses
+    independently — that is what makes heterogeneous schedules fall out of
+    asymmetric pipelines — with ties broken toward the smaller count.
+    ``tau_s`` comes from the LogP :class:`CostModel` (Eq. 5 with zero
+    transfer volume: the chunk's bytes are already priced in the beta
+    term).
+    """
+    tau_s = cost_model.steal_cost(TaskSpec(data_bytes=0))
+    schedule = []
+    for term, counts in zip(hop_terms, hop_candidates):
+        t_comp, beta, alpha = term[0], term[1], term[2]
+        best_k, best_t = 1, float("inf")
+        for k in sorted({max(int(c), 1) for c in counts} | {1}):
+            t = hop_phase_time(t_comp, beta, alpha, k, tau_s=tau_s,
+                               overlap_floor=overlap_floor)
+            if t < best_t:
+                best_k, best_t = k, t
+        schedule.append(best_k)
+    return tuple(schedule)

@@ -9,7 +9,9 @@ runtime should choose.  ``tune()`` closes that loop for one problem key
    (hybrid: every contiguous stage grouping of the dims, the
    pencil-over-k-axes family) over every mesh-axis ordering that divides
    the grid, backend in {xla, matmul}, ``n_chunks`` in powers of two up to
-   the free-dim size;
+   the free-dim size, plus — for multi-hop plans — the **per-hop chunk
+   schedule** the scheduler policy engine proposes from the calibrated
+   cost model (``scheduler.choose_chunk_schedule``: Eq. 7 argmin per hop);
 2. **prune** them with the LogP/roofline model (`perfmodel.predict_plan_time`)
    down to the ``top_k`` most promising survivors;
 3. **measure** each survivor's compiled executable (the measurement also
@@ -56,12 +58,16 @@ from jax.sharding import Mesh
 from .decomp import describe_decomp, make_decomposition, validate_grid
 from .perfmodel import (CPU_CORE, TPU_V5E, Machine, MachineProfile,
                         _calibrate_network, _time_best, calibrate,
-                        predict_plan_time, profile_from_machine)
+                        hop_cost_terms, predict_plan_time,
+                        profile_from_machine)
 from .pipeline import (PipelineSpec, chunk_sites, compile_pipeline,
-                       effective_grid, input_struct, make_spec)
+                       effective_grid, input_struct, make_spec,
+                       output_struct)
 from .plan import (TunedPlan, TuningCache, global_tuning_cache, tuning_key)
+from .scheduler import choose_chunk_schedule
 
 BACKENDS = ("xla", "matmul")
+OBJECTIVES = ("forward", "fwd+scale+inv")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,11 +80,21 @@ class Candidate:
     n_chunks: int
     # Stage grouping for decomp="hybrid" (None for pencil/slab).
     dim_groups: Optional[Tuple[Tuple[int, ...], ...]] = None
+    # Per-hop chunk schedule (forward hop order); None = uniform n_chunks.
+    chunk_schedule: Optional[Tuple[int, ...]] = None
+
+    @property
+    def spec_chunks(self):
+        """What ``make_spec(n_chunks=...)`` should receive."""
+        return (self.chunk_schedule if self.chunk_schedule is not None
+                else self.n_chunks)
 
     def describe(self) -> str:
         decomp = describe_decomp(self.decomp, self.dim_groups)
+        chunks = (",".join(map(str, self.chunk_schedule))
+                  if self.chunk_schedule is not None else str(self.n_chunks))
         return (f"{decomp}({','.join(self.mesh_axes)})/"
-                f"{self.backend}/chunks={self.n_chunks}")
+                f"{self.backend}/chunks={chunks}")
 
 
 def default_machine() -> Machine:
@@ -162,8 +178,9 @@ def resolve_profile(cache: Optional[TuningCache] = None, *, mesh=None,
 
 def _spec_for(mesh: Mesh, grid: Tuple[int, ...], cand_decomp: str,
               mesh_axes: Tuple[str, ...], kinds: Tuple[str, ...],
-              backend: str, n_chunks: int, inverse: bool, n_batch: int,
+              backend: str, n_chunks, inverse: bool, n_batch: int,
               dim_groups=None) -> PipelineSpec:
+    """``n_chunks`` is an int or a per-hop schedule (forward hop order)."""
     dec = make_decomposition(cand_decomp, mesh_axes, len(grid),
                              dim_groups=dim_groups)
     return make_spec(mesh, grid, dec, kinds, backend=backend,
@@ -203,6 +220,79 @@ def feasible_chunk_counts(spec: PipelineSpec, axis_sizes: Dict[str, int],
     return counts
 
 
+def feasible_hop_chunk_counts(spec: PipelineSpec,
+                              axis_sizes: Dict[str, int],
+                              batch_shape: Tuple[int, ...] = (),
+                              max_chunks: Optional[int] = None
+                              ) -> List[List[int]]:
+    """Per executed hop: the powers of two that evenly chunk *that* hop.
+
+    The per-hop generalization of :func:`feasible_chunk_counts`: a hop
+    with no legal chunk dim contributes ``[1]`` without forcing the whole
+    pipeline bulk — other hops keep their own feasible counts, which is
+    what lets the policy engine assign heterogeneous depths.
+    """
+    out: List[List[int]] = []
+    for d, size in chunk_sites(spec, axis_sizes):
+        if d is None:
+            out.append([1])
+            continue
+        if size is None:
+            if d >= len(batch_shape):
+                out.append([1])  # batch extent unknown: don't guess
+                continue
+            size = batch_shape[d]
+        counts = [1]
+        n = 2
+        cap = size if max_chunks is None else min(size, max_chunks)
+        while n <= cap and size % n == 0:
+            counts.append(n)
+            n *= 2
+        out.append(counts)
+    return out
+
+
+def propose_chunk_schedule(spec: PipelineSpec, axis_sizes: Dict[str, int],
+                           machine, *, backend: Optional[str] = None,
+                           dtype_bytes: int = 8,
+                           batch_shape: Tuple[int, ...] = (),
+                           max_chunks: Optional[int] = None
+                           ) -> Tuple[int, ...]:
+    """The scheduler policy engine's per-hop chunk schedule for ``spec``.
+
+    Feeds the calibrated per-mesh-axis all_to_all alpha/beta and the
+    kind-aware per-stage FFT costs (``perfmodel.hop_cost_terms``) into
+    ``scheduler.choose_chunk_schedule`` (Eq. 7 argmin per hop), restricted
+    to each hop's feasible counts (``feasible_hop_chunk_counts``, i.e. the
+    ``chunk_sites`` clamp).  Returns the schedule in **forward hop order**
+    (what ``make_spec`` and ``Candidate.chunk_schedule`` expect), whatever
+    the spec's direction.
+    """
+    from .perfmodel import as_profile, stage_comp_times
+    prof = as_profile(machine)
+    cands = feasible_hop_chunk_counts(spec, axis_sizes, batch_shape,
+                                      max_chunks)
+    stage_t = stage_comp_times(spec.grid, spec.decomp, axis_sizes, prof,
+                               backend=backend or spec.backend,
+                               dtype_bytes=dtype_bytes, kinds=spec.kinds,
+                               eff_grid=spec.eff_grid)
+    terms = hop_cost_terms(spec.grid, spec.decomp, axis_sizes, prof,
+                           backend=backend or spec.backend,
+                           dtype_bytes=dtype_bytes, kinds=spec.kinds,
+                           eff_grid=spec.eff_grid, stage_times=stage_t)
+    if spec.inverse:
+        # Executed hop j inverts forward hop H-1-j (same moves, same
+        # volumes) and feeds forward stage H-1-j — whose compute time is
+        # the *previous* forward stage's, not the next's.  Rebuild the
+        # terms in execution order before choosing.
+        fwd = terms[::-1]
+        terms = [(stage_t[len(terms) - 1 - j],) + tuple(fwd[j][1:])
+                 for j in range(len(fwd))]
+    sched = choose_chunk_schedule(terms, cands,
+                                  overlap_floor=prof.overlap)
+    return sched if not spec.inverse else sched[::-1]
+
+
 def _hybrid_groupings(ndim: int, n_axes: int
                       ) -> List[Tuple[Tuple[int, ...], ...]]:
     """Contiguous stage groupings a hybrid over ``n_axes`` axes can run.
@@ -225,7 +315,9 @@ def enumerate_candidates(grid: Tuple[int, ...], mesh: Mesh,
                          n_batch: int = 0,
                          batch_shape: Tuple[int, ...] = (),
                          backends: Sequence[str] = BACKENDS,
-                         max_chunks: Optional[int] = None) -> List[Candidate]:
+                         max_chunks: Optional[int] = None,
+                         machine=None, dtype_bytes: int = 8
+                         ) -> List[Candidate]:
     """All valid plans for this (grid, mesh, kinds) problem.
 
     Mesh-axis *orderings* are part of the space: on a (2, 4) mesh, pencil
@@ -242,6 +334,14 @@ def enumerate_candidates(grid: Tuple[int, ...], mesh: Mesh,
     or the slab (one leading group over one axis) are skipped as
     duplicates.  Enumeration stays cheap — the prune-then-measure flow
     bounds what actually gets compiled and timed to ``top_k``.
+
+    With ``machine`` (a :class:`Machine`/:class:`MachineProfile`), the
+    scheduler's policy engine additionally proposes a **per-hop chunk
+    schedule** for every multi-hop structural point and backend
+    (:func:`propose_chunk_schedule`): when the Eq. 7 argmin differs across
+    hops — an asymmetric pipeline — the heterogeneous schedule rides
+    alongside the uniform counts as its own candidate.  (Uniform argmins
+    add nothing: the uniform sweep already covers them.)
     """
     ndim = len(grid)
     names = tuple(mesh.axis_names)
@@ -277,6 +377,18 @@ def enumerate_candidates(grid: Tuple[int, ...], mesh: Mesh,
                 out.append(Candidate(decomp=decomp_kind, mesh_axes=axes,
                                      backend=backend, n_chunks=n_chunks,
                                      dim_groups=groups))
+        if machine is not None and len(spec.decomp.redists) > 1:
+            for backend in backends:
+                sched = propose_chunk_schedule(
+                    spec, axis_sizes, machine, backend=backend,
+                    dtype_bytes=dtype_bytes, batch_shape=batch_shape,
+                    max_chunks=max_chunks)
+                if len(set(sched)) > 1:
+                    out.append(Candidate(decomp=decomp_kind, mesh_axes=axes,
+                                         backend=backend,
+                                         n_chunks=max(sched),
+                                         dim_groups=groups,
+                                         chunk_schedule=sched))
     return out
 
 
@@ -290,7 +402,12 @@ def rank_candidates(cands: Sequence[Candidate], grid: Tuple[int, ...],
     With ``kinds`` the model is kind-aware: each candidate is priced on its
     own R2C-padded effective grid (padding depends on the decomposition) and
     with per-kind stage costs.  ``kinds=None`` reproduces the legacy
-    C2C-on-the-logical-grid pricing.
+    C2C-on-the-logical-grid pricing.  Every candidate is priced **hop by
+    hop** (``predict_plan_time(chunk_schedule=...)``, a uniform count being
+    the constant schedule) so heterogeneous and uniform schedules rank on
+    the same Eq. 7 objective the policy engine optimizes — mixing the
+    legacy whole-plan overlap formula with per-hop pricing would
+    systematically favor whichever happened to be cheaper-formed.
     """
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     kinds = tuple(kinds) if kinds is not None else None
@@ -300,11 +417,14 @@ def rank_candidates(cands: Sequence[Candidate], grid: Tuple[int, ...],
                                  dim_groups=cand.dim_groups)
         eff = (effective_grid(grid, dec, axis_sizes, kinds)
                if kinds is not None else None)
+        sched = (cand.chunk_schedule if cand.chunk_schedule is not None
+                 else (cand.n_chunks,) * len(dec.redists))
         pred = predict_plan_time(grid, dec, axis_sizes, machine,
                                  backend=cand.backend,
                                  n_chunks=cand.n_chunks,
                                  dtype_bytes=dtype_bytes,
-                                 kinds=kinds, eff_grid=eff)
+                                 kinds=kinds, eff_grid=eff,
+                                 chunk_schedule=sched)
         ranked.append((pred["t_total_s"], cand))
     ranked.sort(key=lambda t: t[0])
     return ranked
@@ -337,19 +457,37 @@ def measure_candidate(cand: Candidate, grid: Tuple[int, ...], mesh: Mesh,
                       kinds: Tuple[str, ...], dtype, *,
                       inverse: bool = False,
                       batch_shape: Tuple[int, ...] = (),
-                      repeats: int = 3) -> float:
+                      repeats: int = 3,
+                      objective: str = "forward") -> float:
     """Wall time of the candidate's compiled executable (best of repeats).
 
     Compilation goes through ``compile_pipeline``'s plan cache, so measuring
     doubles as warming: the winner's executable is already resident when the
     user calls ``fftnd`` afterwards.
+
+    ``objective="fwd+scale+inv"`` times the full paired round trip instead
+    — forward, an elementwise spectral scale (the eigenvalue-divide stand-
+    in), inverse — which is what a :class:`~repro.core.api.PoissonSolver`
+    actually runs per solve.  Both directions compile from the *same*
+    candidate, so the forward winner's stage-0 layout is reused by the
+    inverse and no relayout can appear between them.
     """
     spec = _spec_for(mesh, grid, cand.decomp, cand.mesh_axes, kinds,
-                     cand.backend, cand.n_chunks, inverse, len(batch_shape),
-                     dim_groups=cand.dim_groups)
+                     cand.backend, cand.spec_chunks, inverse,
+                     len(batch_shape), dim_groups=cand.dim_groups)
     exe = compile_pipeline(mesh, spec, batch_shape=batch_shape, dtype=dtype)
     arg = input_struct(mesh, spec, batch_shape, dtype)
     x = synth_input(arg)
+    if objective == "fwd+scale+inv":
+        out = output_struct(mesh, spec, batch_shape, dtype)
+        inv_spec = _spec_for(mesh, grid, cand.decomp, cand.mesh_axes, kinds,
+                             cand.backend, cand.spec_chunks, not inverse,
+                             len(batch_shape), dim_groups=cand.dim_groups)
+        inv_exe = compile_pipeline(mesh, inv_spec, batch_shape=batch_shape,
+                                   dtype=out.dtype)
+        scale = jax.jit(lambda a: a * 0.5)
+        return _time_best(lambda: inv_exe(scale(exe(x))),
+                          time.perf_counter, repeats)
     # _time_best's first call doubles as the warm-up (plus any lazy init).
     return _time_best(lambda: exe(x), time.perf_counter, repeats)
 
@@ -368,7 +506,8 @@ def resolve_tuned_plan(grid: Sequence[int], mesh: Mesh, *,
                        dtype=jnp.complex64, inverse: bool = False,
                        batch_shape: Sequence[int] = (), mode: str = "off",
                        cache: Optional[TuningCache] = None,
-                       default: Optional[Candidate] = None) -> TunedPlan:
+                       default: Optional[Candidate] = None,
+                       objective: str = "forward") -> TunedPlan:
     """One :class:`TunedPlan` per tuning policy — the plan API's entry point.
 
     ``mode="off"`` wraps the caller's explicit ``default`` candidate in a
@@ -386,9 +525,11 @@ def resolve_tuned_plan(grid: Sequence[int], mesh: Mesh, *,
                          mesh_axes=tuple(default.mesh_axes),
                          backend=default.backend, n_chunks=default.n_chunks,
                          predicted_s=0.0, measured_s=0.0, source="default",
-                         dim_groups=default.dim_groups)
+                         dim_groups=default.dim_groups,
+                         chunk_schedule=default.chunk_schedule)
     return tune(grid, mesh, kinds=kinds, dtype=dtype, inverse=inverse,
-                batch_shape=batch_shape, mode=mode, cache=cache)
+                batch_shape=batch_shape, mode=mode, cache=cache,
+                objective=objective)
 
 
 def tune(grid: Sequence[int], mesh: Mesh, *,
@@ -397,7 +538,8 @@ def tune(grid: Sequence[int], mesh: Mesh, *,
          mode: str = "auto", cache: Optional[TuningCache] = None,
          machine=None, top_k: int = 3,
          backends: Sequence[str] = BACKENDS,
-         max_chunks: Optional[int] = None, repeats: int = 3) -> TunedPlan:
+         max_chunks: Optional[int] = None, repeats: int = 3,
+         objective: str = "forward") -> TunedPlan:
     """Pick the best plan for one problem key; see the module docstring.
 
     ``mode="auto"``       enumerate -> prune -> measure top_k -> persist.
@@ -407,26 +549,38 @@ def tune(grid: Sequence[int], mesh: Mesh, *,
     :func:`resolve_profile` (load from the wisdom file, or — in auto mode —
     calibrate and persist; ``REPRO_CALIBRATE=off`` forces model defaults).
     Pruning is kind-aware: candidates are priced with ``kinds`` and their
-    decomposition's R2C-padded effective grid.
+    decomposition's R2C-padded effective grid.  The search space includes
+    the scheduler policy engine's per-hop chunk schedules (see
+    :func:`enumerate_candidates`), each priced hop-by-hop.
+
+    ``objective="fwd+scale+inv"`` measures the joint paired round trip
+    (the PoissonSolver workload) instead of the forward transform alone,
+    under its own wisdom key (``op=fwd+scale+inv``) so the joint winner
+    never shadows a forward-only plan.
 
     The returned :class:`TunedPlan` carries the winning (decomp, mesh_axes,
-    backend, n_chunks) plus its predicted and (for auto) measured times.
-    Only searches over the **unrestricted** space (all ``backends``, no
-    ``max_chunks`` cap) are persisted: a restricted search's winner must
-    never shadow — or poison — the plan an unrestricted caller would get.
+    backend, n_chunks, chunk_schedule) plus its predicted and (for auto)
+    measured times.  Only searches over the **unrestricted** space (all
+    ``backends``, no ``max_chunks`` cap) are persisted: a restricted
+    search's winner must never shadow — or poison — the plan an
+    unrestricted caller would get.
     """
     grid = tuple(grid)
     batch_shape = tuple(batch_shape)
     kinds = tuple(kinds) if kinds is not None else ("fft",) * len(grid)
     if mode not in ("auto", "heuristic"):
         raise ValueError(f"tune mode must be auto|heuristic, got {mode!r}")
+    if objective not in OBJECTIVES:
+        raise ValueError(f"tune objective must be one of {OBJECTIVES}, "
+                         f"got {objective!r}")
     unrestricted = set(BACKENDS).issubset(set(backends)) and max_chunks is None
 
     key = tuning_key(grid=grid, mesh_shape=tuple(mesh.devices.shape),
                      mesh_axes=tuple(mesh.axis_names), kinds=kinds,
                      dtype=str(jnp.dtype(dtype)), inverse=inverse,
                      batch_shape=batch_shape,
-                     platform=jax.default_backend())
+                     platform=jax.default_backend(),
+                     op="fft" if objective == "forward" else objective)
     if mode == "auto":
         if cache is None:
             cache = global_tuning_cache()
@@ -438,14 +592,6 @@ def tune(grid: Sequence[int], mesh: Mesh, *,
                 max_chunks is None or hit.n_chunks <= max_chunks):
             return hit
 
-    cands = enumerate_candidates(grid, mesh, kinds, inverse=inverse,
-                                 n_batch=len(batch_shape),
-                                 batch_shape=batch_shape, backends=backends,
-                                 max_chunks=max_chunks)
-    if not cands:
-        raise ValueError(
-            f"no valid plan for grid {grid} on mesh "
-            f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
     if machine is None:
         # Heuristic mode stays measurement-free but still *reads* wisdom:
         # a profile calibrated by an earlier auto run (any process) is
@@ -456,6 +602,15 @@ def tune(grid: Sequence[int], mesh: Mesh, *,
         machine = resolve_profile(profile_cache, mesh=mesh,
                                   allow_calibrate=(mode == "auto"))
     dtype_bytes = jnp.dtype(dtype).itemsize
+    cands = enumerate_candidates(grid, mesh, kinds, inverse=inverse,
+                                 n_batch=len(batch_shape),
+                                 batch_shape=batch_shape, backends=backends,
+                                 max_chunks=max_chunks, machine=machine,
+                                 dtype_bytes=dtype_bytes)
+    if not cands:
+        raise ValueError(
+            f"no valid plan for grid {grid} on mesh "
+            f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
     ranked = rank_candidates(cands, grid, mesh, machine, dtype_bytes,
                              kinds=kinds)
 
@@ -464,7 +619,9 @@ def tune(grid: Sequence[int], mesh: Mesh, *,
         return TunedPlan(decomp=best.decomp, mesh_axes=best.mesh_axes,
                          backend=best.backend, n_chunks=best.n_chunks,
                          predicted_s=pred, measured_s=0.0,
-                         source="heuristic", dim_groups=best.dim_groups)
+                         source="heuristic", dim_groups=best.dim_groups,
+                         chunk_schedule=best.chunk_schedule,
+                         objective=objective)
 
     survivors = [c for _, c in ranked[:max(top_k, 1)]]
     baseline = _default_candidate(cands)
@@ -475,7 +632,7 @@ def tune(grid: Sequence[int], mesh: Mesh, *,
     for cand in survivors:
         t = measure_candidate(cand, grid, mesh, kinds, dtype,
                               inverse=inverse, batch_shape=batch_shape,
-                              repeats=repeats)
+                              repeats=repeats, objective=objective)
         if cand == baseline:
             baseline_time = t
         if t < best_time:
@@ -485,7 +642,9 @@ def tune(grid: Sequence[int], mesh: Mesh, *,
                      predicted_s=predicted.get(best_cand, 0.0),
                      measured_s=best_time, source="measured",
                      baseline_s=baseline_time, ts=time.time(),
-                     dim_groups=best_cand.dim_groups)
+                     dim_groups=best_cand.dim_groups,
+                     chunk_schedule=best_cand.chunk_schedule,
+                     objective=objective)
     if unrestricted:
         # A restricted winner (e.g. backends=("xla",) or max_chunks=2) was
         # picked from a smaller space under the same key; persisting it

@@ -151,6 +151,108 @@ print("rt", float(np.max(np.abs(np.real(np.asarray(xb[4])) - np.real(xin)))))
     assert float(vals["rt"]) < 1e-5
 
 
+HET_CASES = {
+    # decomp tag -> (decomp, mesh_axes, dim_groups, grid, schedules)
+    "pencil": ("pencil", ("data", "model"), None, (8, 8, 16),
+               [(4, 2), (1, 4)]),
+    "slab": ("slab", ("model",), None, (8, 8, 16), [(4,), (2,)]),
+    # 3-group 4-D hybrid on the 2-axis mesh: two hops with different
+    # feasible depths (hop 0's free dim is small) — the asymmetric case
+    # per-hop schedules exist for.
+    "hybrid": ("hybrid", ("data", "model"), ((0, 1), (2,), (3,)),
+               (4, 4, 8, 8), [(2, 4), (1, 2)]),
+}
+
+
+@pytest.mark.parametrize("case", sorted(HET_CASES))
+@pytest.mark.parametrize("kind0", ["fft", "rfft"])
+def test_heterogeneous_schedule_identity_sweep(case, kind0):
+    """Per-hop schedules are numerically identical to the bulk path for
+    every decomposition family, both directions and both C2C/R2C — the
+    heterogeneous generalization of the chunked-vs-bulk sweep above.
+    Hand-picked schedules give each hop a *different* depth (clamps, where
+    a hop cannot honour its entry, must also preserve identity)."""
+    decomp, mesh_axes, dim_groups, grid, schedules = HET_CASES[case]
+    kinds = (kind0,) + ("fft",) * (len(grid) - 1)
+    out = run_subprocess(COMMON + f"""
+import warnings
+from repro.core import plan_fft
+warnings.simplefilter("ignore")   # clamp warnings expected on rfft grids
+grid = {grid!r}
+kinds = {kinds!r}
+schedules = {schedules!r}
+if kinds[0] == "rfft":
+    xin = rng.standard_normal(grid).astype(np.float32)
+else:
+    xin = (rng.standard_normal(grid)
+           + 1j*rng.standard_normal(grid)).astype(np.complex64)
+ref = np.fft.fftn(xin)
+nfreq = grid[0]//2 + 1
+mk = lambda n: plan_fft(mesh, grid, kinds=kinds, decomp={decomp!r},
+                        mesh_axes={mesh_axes!r}, dim_groups={dim_groups!r},
+                        n_chunks=n)
+bulk = mk(1)
+y1 = bulk(jnp.asarray(xin))
+x1 = bulk.inverse(y1)
+for i, sched in enumerate(schedules):
+    p = mk(sched)
+    y = p(jnp.asarray(xin))
+    xb = p.inverse(y)
+    print(f"fwd_diff_{{i}}",
+          float(np.max(np.abs(np.asarray(y1) - np.asarray(y)))))
+    print(f"inv_diff_{{i}}",
+          float(np.max(np.abs(np.asarray(x1) - np.asarray(xb)))))
+yv = np.asarray(y1)[:nfreq] if kinds[0] == "rfft" else np.asarray(y1)
+rv = ref[:nfreq] if kinds[0] == "rfft" else ref
+print("fwd", float(np.max(np.abs(yv - rv)) / np.max(np.abs(rv))))
+print("rt", float(np.max(np.abs(np.real(np.asarray(x1)) - np.real(xin)))))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    for i in range(2):
+        assert float(vals[f"fwd_diff_{i}"]) < 1e-6, (case, kind0, i)
+        assert float(vals[f"inv_diff_{i}"]) < 1e-6, (case, kind0, i)
+    assert float(vals["fwd"]) < 1e-5
+    assert float(vals["rt"]) < 1e-5
+
+
+def test_per_hop_schedule_clamp_recorded():
+    """An infeasible per-hop entry clamps at spec time, the clamp is
+    recorded on the PipelineSpec (requested vs effective, per hop) and
+    surfaced by describe()."""
+    out = run_subprocess(COMMON + """
+import warnings
+from repro.core import plan_fft
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter("always")
+    # pencil on (4, 8, 16): hop 0's chunk dim is z (local 4), hop 1's is
+    # x (local 2) — an (8, 2) ask must clamp hop 0 to 4 and keep hop 1.
+    p = plan_fft(mesh, (4, 8, 16), decomp="pencil", n_chunks=(8, 2))
+xs = (rng.standard_normal((4, 8, 16))
+      + 1j*rng.standard_normal((4, 8, 16))).astype(np.complex64)
+y = p(jnp.asarray(xs))
+spec = p._fwd_spec
+print("schedule", ",".join(map(str, spec.chunk_schedule)))
+print("requested", ",".join(map(str, spec.chunk_schedule_requested)))
+print("clamped", int(spec.chunk_clamped))
+print("hop_clamps", ";".join(f"{i}:{a}->{g}" for i, a, g in spec.hop_clamps))
+print("warned", int(any("clamped" in str(x.message) for x in w)))
+d = p.describe()
+print("desc_sched", int("per-hop (4, 2)" in d))
+print("desc_clamp", int("clamped from (8, 2) at hop 0" in d))
+print("fwd", float(np.max(np.abs(np.asarray(y) - np.fft.fftn(xs)))
+                   / np.max(np.abs(np.fft.fftn(xs)))))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert vals["schedule"] == "4,2"
+    assert vals["requested"] == "8,2"
+    assert vals["clamped"] == "1"
+    assert vals["hop_clamps"] == "0:8->4"
+    assert vals["warned"] == "1"
+    assert vals["desc_sched"] == "1"
+    assert vals["desc_clamp"] == "1"
+    assert float(vals["fwd"]) < 1e-5
+
+
 def test_chunked_inverse_slab_matches_bulk_inverse():
     """Direct regression for the free_chunk_dim bug: a chunked inverse
     slab pipeline must reproduce the bulk inverse exactly (at HEAD it

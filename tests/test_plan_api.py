@@ -153,6 +153,40 @@ def test_plan_fft_dim_groups_implies_hybrid(cpu_mesh):
                  dim_groups=((0, 1), (2,)), precompiled=False)
 
 
+def test_plan_fft_accepts_chunk_schedule(cpu_mesh):
+    """Tentpole: n_chunks= takes a per-hop sequence — one entry per
+    redistribution hop, forward hop order — carried on the spec, shown by
+    describe(), and inverted hop-aware for the inverse pipeline."""
+    from repro.core import plan_fft
+    plan = plan_fft(cpu_mesh, (8, 8, 16), n_chunks=(4, 2),
+                    precompiled=False)
+    assert plan.chunk_schedule == (4, 2)
+    assert plan.n_chunks == 4                       # scalar view: deepest
+    assert "per-hop (4, 2)" in plan.describe()
+    # the inverse executes the hops LIFO, so its schedule is reversed
+    assert plan._inv_spec.chunk_schedule == (2, 4)
+    # a wrong-length schedule names the hop count in the error
+    with pytest.raises(ValueError, match="2 redistribution hops"):
+        plan_fft(cpu_mesh, (8, 8, 16), n_chunks=(4, 2, 2),
+                 precompiled=False)
+    with pytest.raises(ValueError, match=">= 1"):
+        plan_fft(cpu_mesh, (8, 8, 16), n_chunks=(0, 2), precompiled=False)
+
+
+def test_compile_key_includes_chunk_schedule(cpu_mesh):
+    """Two plans differing only in their per-hop schedule must compile to
+    different executables (distinct plan-cache keys)."""
+    from repro.core import GLOBAL_PLAN_CACHE, plan_fft
+    s0 = GLOBAL_PLAN_CACHE.stats()
+    plan_fft(cpu_mesh, (4, 4, 8), n_chunks=(2, 1))
+    plan_fft(cpu_mesh, (4, 4, 8), n_chunks=(1, 2))
+    s1 = GLOBAL_PLAN_CACHE.stats()
+    assert s1["misses"] == s0["misses"] + 2
+    # and an identical schedule is a cache hit, not a third compile
+    plan_fft(cpu_mesh, (4, 4, 8), n_chunks=(1, 2))
+    assert GLOBAL_PLAN_CACHE.stats()["misses"] == s1["misses"]
+
+
 def test_plan_memo_lru_bound(cpu_mesh, monkeypatch):
     """Satellite: the wrapper plan memo is LRU-bounded so long-running
     serving processes sweeping many (grid, mesh, dtype) keys cannot grow
@@ -353,6 +387,70 @@ print("describe_ok", int("PoissonSolver" in solver.describe()))
     assert vals["identical"] == "1"
     assert float(vals["res"]) < 1e-4
     assert vals["describe_ok"] == "1"
+
+
+def test_poisson_solver_joint_tuning_objective():
+    """Satellite: PoissonSolver tunes ONCE per topology under the joint
+    fwd+scale+inv objective — a single tuning resolution whose evidence
+    shows in describe() — instead of a forward-only winner the inverse
+    just has to live with."""
+    out = run_subprocess(COMMON + """
+import warnings
+warnings.simplefilter("ignore")
+cache = TuningCache(None)
+solver = PoissonSolver(mesh, (16, 16, 16), tuning="heuristic",
+                       tune_cache=cache)
+print("objective", solver.plan.tuned.objective)
+d = solver.describe()
+print("joint_desc", int("joint fwd+scale+inv" in d))
+print("single_resolution", int("single resolution" in d))
+print("tuner_tag", int("[fwd+scale+inv]" in d))
+n = 16
+rhs = np.asarray((np.random.default_rng(1).standard_normal((n, n, n)))
+                 .astype(np.float32))
+rhs -= rhs.mean()
+phi = np.asarray(solver(jnp.asarray(rhs)))
+dx = 2*np.pi/n
+lap = (sum(np.roll(phi, s, a) for a in range(3) for s in (1, -1))
+       - 6*phi)/dx**2
+print("res", float(np.max(np.abs(lap - rhs)) / np.max(np.abs(rhs))))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert vals["objective"] == "fwd+scale+inv"
+    assert vals["joint_desc"] == "1"
+    assert vals["single_resolution"] == "1"
+    assert vals["tuner_tag"] == "1"
+    assert float(vals["res"]) < 1e-4
+
+
+def test_poisson_auto_tuning_uses_joint_measurement_key():
+    """Auto mode measures candidates on the full fwd+scale+inv round trip
+    and persists exactly one wisdom entry per topology, under the joint
+    op= key — a fresh process is served from it without re-measuring."""
+    out = run_subprocess(COMMON + """
+import json, os, tempfile, warnings
+warnings.simplefilter("ignore")
+path = os.path.join(tempfile.mkdtemp(), "tuning.json")
+cache = TuningCache(path)
+solver = PoissonSolver(mesh, (8, 8, 16), tuning="auto", tune_cache=cache)
+raw = json.load(open(path))
+keys = list(raw["plans"])
+print("nkeys", len(keys))
+print("joint_key", int(all("op=fwd+scale+inv" in k for k in keys)))
+print("source", solver.plan.tuned.source)
+print("measured_pos", int(solver.plan.tuned.measured_s > 0))
+c2 = TuningCache(path)
+s2 = PoissonSolver(mesh, (8, 8, 16), tuning="auto", tune_cache=c2)
+print("hit", c2.stats()["hits"])
+print("same_plan", int(s2.plan.tuned == solver.plan.tuned))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert int(vals["nkeys"]) == 1
+    assert vals["joint_key"] == "1"
+    assert vals["source"] == "measured"
+    assert vals["measured_pos"] == "1"
+    assert int(vals["hit"]) == 1
+    assert vals["same_plan"] == "1"
 
 
 def test_poisson_solve_forwards_precompiled():

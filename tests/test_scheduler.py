@@ -1,5 +1,7 @@
 """Scheduler tests: Alg. 3 placement, Eq. 6 steal gating, Table II-style
-imbalance reduction, live pool execution, plan-cache behaviour."""
+imbalance reduction, live pool execution, plan-cache behaviour, and the
+chunk-schedule policy engine (Eq. 7 per-hop argmin)."""
+import statistics
 import threading
 import time
 
@@ -8,7 +10,8 @@ import pytest
 
 from repro.core.plan import PlanCache, plan_key
 from repro.core.scheduler import (CostModel, ScheduleSimulator, TaskSpec,
-                                  WorkStealingPool, phase_time, place_tasks)
+                                  WorkStealingPool, choose_chunk_schedule,
+                                  hop_phase_time, phase_time, place_tasks)
 
 
 def imbalanced_tasks(n_workers=6, per_worker=4, heavy=2.2, light=0.5,
@@ -73,6 +76,43 @@ def test_place_tasks_rebalances_variance():
     assert r_re["wall_s"] < r_naive["wall_s"]
 
 
+def _placement_loads(tasks, sigma, n_workers, cm=CostModel()):
+    loads = [0.0] * n_workers
+    for i, t in enumerate(tasks):
+        loads[sigma[i]] += cm.placement_cost(t, sigma[i])
+    return loads
+
+
+def test_place_tasks_rebalance_scans_beyond_oversized_tail():
+    """Regression (fails at HEAD): the rebalance pass popped only the tail
+    of the most-loaded queue and gave up when migrating it would not help —
+    even though cheaper tasks earlier in that queue would bring the
+    coefficient of variation under the threshold."""
+    tasks = ([TaskSpec(home=0, cost=1.0) for _ in range(2)]
+             + [TaskSpec(home=0, cost=5.0)]        # oversized tail task
+             + [TaskSpec(home=1, cost=2.5)])
+    sigma = place_tasks(tasks, 2, variance_threshold=0.25)
+    loads = _placement_loads(tasks, sigma, 2)
+    cv = statistics.pstdev(loads) / statistics.mean(loads)
+    assert cv <= 0.25, (sigma, loads)    # at HEAD cv stays ~0.47
+    assert sigma[2] == 0                 # the big task itself never moved
+    assert sigma[0] == sigma[1] == 1     # the two small head tasks migrated
+
+
+def test_place_tasks_rebalance_considers_other_source_workers():
+    """When the most-loaded worker's queue holds only an unmovable task,
+    the next-most-loaded worker's queue must still be scanned instead of
+    terminating the pass."""
+    tasks = ([TaskSpec(home=0, cost=6.0)]          # w0: single huge task
+             + [TaskSpec(home=1, cost=1.0) for _ in range(4)])  # w1: smalls
+    sigma = place_tasks(tasks, 3, variance_threshold=0.25)
+    # something from w1 must have reached the idle worker 2
+    assert any(s == 2 for s in sigma[1:])
+    loads = _placement_loads(tasks, sigma, 3)
+    naive = _placement_loads(tasks, [t.home for t in tasks], 3)
+    assert statistics.pstdev(loads) < statistics.pstdev(naive)
+
+
 def test_pool_executes_everything():
     done = []
     lock = threading.Lock()
@@ -104,9 +144,120 @@ def test_pool_steals_under_imbalance():
     assert stats["steals"] > 0
 
 
+def _reference_try_get(deques, steal, cm, w):
+    """Brute-force O(workers x queue) replica of the pre-fix _try_get."""
+    if deques[w]:
+        return deques[w].popleft(), False
+    if not steal:
+        return None
+    victim, best_load = -1, 0.0
+    for v in range(len(deques)):
+        if v == w or not deques[v]:
+            continue
+        load = sum(t.cost for t in deques[v])
+        if load > best_load:
+            victim, best_load = v, load
+    if victim < 0:
+        return None
+    t = deques[victim][-1]
+    if best_load / 2.0 <= cm.steal_cost(t):
+        return None
+    deques[victim].pop()
+    return t, True
+
+
+def test_pool_running_totals_match_reference_steals():
+    """The O(workers) victim selection (running per-deque cost totals) must
+    make byte-identical decisions to the old O(workers x queue) scan: same
+    victims, same Eq. 6 gates, same steal count — driven single-threaded on
+    the imbalanced Table II workload so the comparison is deterministic."""
+    import collections
+    import copy
+    cm = CostModel(steal_overhead_s=0.0)
+    tasks = imbalanced_tasks()
+    pool = WorkStealingPool(6, steal=True, cost_model=cm)
+    ref = [collections.deque() for _ in range(6)]
+    for t in tasks:
+        pool.submit(t)
+        ref[t.home].append(copy.copy(t))
+        # invariant: incremental totals == recomputed queue sums
+        for v in range(6):
+            assert pool.queue_costs()[v] == pytest.approx(
+                sum(q.cost for q in pool.deques[v]))
+    steals = ref_steals = 0
+    # Light workers drain their own queues then keep polling — the steal
+    # path — before the heavy owners (0, 1) ever get scheduled.
+    order = ([2] * 10 + [3] * 10 + [4] * 10 + [5] * 10
+             + [0] * 10 + [1] * 10)
+    for w in order:
+        got = pool._try_get(w)
+        ref_got = _reference_try_get(ref, True, cm, w)
+        assert (got is None) == (ref_got is None)
+        if got is None:
+            continue
+        task, stolen = got
+        ref_task, ref_stolen = ref_got
+        assert stolen == ref_stolen
+        assert task.cost == ref_task.cost and task.home == ref_task.home
+        steals += int(stolen)
+        ref_steals += int(ref_stolen)
+        for v in range(6):
+            assert pool.queue_costs()[v] == pytest.approx(
+                sum(q.cost for q in pool.deques[v]))
+    assert steals == ref_steals
+    assert steals > 0                       # the workload does steal
+    assert all(not d for d in pool.deques)  # drained
+    assert pool.queue_costs() == pytest.approx([0.0] * 6)
+
+
 def test_phase_time_eq7():
     assert phase_time(2.0, 1.0, 10, 0.01, rho=1.0) == 2.0
     assert phase_time(1.0, 2.0, 10, 0.01, rho=0.0) == pytest.approx(2.1)
+
+
+# ---------------------------------------------------------------------------
+# Chunk-schedule policy engine
+# ---------------------------------------------------------------------------
+
+def test_hop_phase_time_limits():
+    # k=1, no overlap floor: bulk-synchronous sum plus one tau round
+    assert hop_phase_time(2.0, 1.0, 0.1, 1, tau_s=0.01) == \
+        pytest.approx(2.0 + 1.1 + 0.01)
+    # deep chunking on a comp-bound hop approaches max() + alpha residue
+    t8 = hop_phase_time(2.0, 1.0, 0.0, 8)
+    assert t8 == pytest.approx(2.0 + 1.0 / 8)
+    # alpha cost grows with k: an alpha-dominated hop prefers k=1
+    assert hop_phase_time(0.1, 0.1, 1.0, 4) > hop_phase_time(0.1, 0.1, 1.0, 1)
+
+
+def test_choose_chunk_schedule_is_per_hop():
+    """The policy engine's point: a comp-bound hop (chunking hides its
+    comm) and an alpha-bound hop (chunking only adds latency) get
+    *different* counts in one schedule."""
+    comp_bound = (1e-3, 5e-4, 1e-7)     # t_comp >> alpha: chunk deep
+    alpha_bound = (1e-6, 1e-6, 1e-3)    # alpha dominates: stay bulk
+    sched = choose_chunk_schedule([comp_bound, alpha_bound],
+                                  [[1, 2, 4, 8], [1, 2, 4, 8]])
+    assert sched[0] > 1
+    assert sched[1] == 1
+    assert len(set(sched)) > 1
+
+
+def test_choose_chunk_schedule_respects_feasibility():
+    comp_bound = (1e-3, 5e-4, 1e-7)
+    sched = choose_chunk_schedule([comp_bound, comp_bound],
+                                  [[1, 2], [1, 2, 4, 8]])
+    assert sched[0] <= 2                # clamped to the hop's own counts
+    assert sched == (2, 8)              # both comp-bound: deepest feasible
+    assert choose_chunk_schedule([], []) == ()
+
+
+def test_choose_chunk_schedule_tie_prefers_smaller():
+    """Zero-cost hops: every k ties, the bulk path must win."""
+    sched = choose_chunk_schedule([(0.0, 0.0, 0.0)], [[1, 2, 4]],
+                                  cost_model=CostModel(latency_s=0.0,
+                                                       steal_overhead_s=0.0))
+    assert sched == (1,)
 
 
 def test_plan_cache_hit_miss():

@@ -114,6 +114,45 @@ def test_enumerate_4d_on_2axis_mesh(cpu_mesh):
     assert any(c.dim_groups == ((0, 1), (2, 3)) for c in cands)
 
 
+def test_predict_plan_time_prices_each_hop_at_own_count():
+    """Acceptance: per-hop pricing — a schedule deepening only hop 0 adds
+    only hop 0's extra alpha rounds/messages, and the schedule echoes back
+    in the prediction."""
+    grid = (8, 8, 16)
+    dec = pencil_nd(("data", "model"), 3)
+    base = predict_plan_time(grid, dec, AXIS_SIZES, CPU_CORE,
+                             chunk_schedule=(1, 1))
+    deep = predict_plan_time(grid, dec, AXIS_SIZES, CPU_CORE,
+                             chunk_schedule=(8, 1))
+    # hop 0 is over "data" (2 peers): 1 message per round, 8 rounds now
+    assert deep["messages"] == base["messages"] + 7
+    assert deep["chunk_schedule"] == (8, 1)
+    assert deep["t_comm_s"] > base["t_comm_s"]   # alpha * k grew on hop 0
+    with pytest.raises(ValueError, match="entries"):
+        predict_plan_time(grid, dec, AXIS_SIZES, CPU_CORE,
+                          chunk_schedule=(2,))
+
+
+def test_feasible_hop_chunk_counts(cpu_mesh):
+    from repro.core.decomp import make_decomposition
+    from repro.core.pipeline import make_spec
+    from repro.core.tuner import feasible_hop_chunk_counts
+    dec = make_decomposition("pencil", ("data", "model"), 3)
+    spec = make_spec(cpu_mesh, (8, 8, 16), dec, ("fft",) * 3)
+    # hop 0 chunks z (16/4=4 on the 2x4 mesh), hop 1 chunks x (8/2=4):
+    # per-hop counts, not the gcd-coupled uniform list.
+    per_hop = feasible_hop_chunk_counts(spec, {"data": 2, "model": 4})
+    assert per_hop == [[1, 2, 4], [1, 2, 4]]
+    assert feasible_hop_chunk_counts(spec, {"data": 2, "model": 4},
+                                     max_chunks=2) == [[1, 2], [1, 2]]
+    # an inverse slab's single hop has no legal chunk dim: [1], not []
+    import dataclasses
+    slab = make_decomposition("slab", ("model",), 3)
+    inv = dataclasses.replace(
+        make_spec(cpu_mesh, (8, 8, 16), slab, ("fft",) * 3), inverse=True)
+    assert feasible_hop_chunk_counts(inv, {"data": 1, "model": 1}) == [[1]]
+
+
 def test_tuned_plan_dim_groups_json_roundtrip():
     hyb = _plan(decomp="hybrid", dim_groups=((0, 1), (2, 3)))
     assert TunedPlan.from_json(hyb.to_json()) == hyb
@@ -122,6 +161,24 @@ def test_tuned_plan_dim_groups_json_roundtrip():
     plain = _plan()
     assert "dim_groups" not in plain.to_json()
     assert TunedPlan.from_json(plain.to_json()).dim_groups is None
+
+
+def test_tuned_plan_chunk_schedule_json_roundtrip():
+    """Per-hop schedules persist through the wisdom cache; pre-schedule
+    int-valued entries (no ``chunk_schedule`` key) read back as uniform."""
+    het = _plan(chunk_schedule=(4, 2))
+    assert het.to_json()["chunk_schedule"] == [4, 2]
+    assert TunedPlan.from_json(het.to_json()) == het
+    assert "chunks=4,2" in het.describe()
+    legacy = _plan().to_json()
+    assert "chunk_schedule" not in legacy          # old-format entry
+    assert TunedPlan.from_json(legacy).chunk_schedule is None
+    # the joint-measurement objective round-trips, defaults stay implicit
+    joint = _plan(objective="fwd+scale+inv")
+    assert joint.to_json()["objective"] == "fwd+scale+inv"
+    assert TunedPlan.from_json(joint.to_json()) == joint
+    assert "objective" not in _plan().to_json()
+    assert TunedPlan.from_json(_plan().to_json()).objective == "forward"
 
 
 # ---------------------------------------------------------------------------
@@ -416,6 +473,102 @@ print("has_pencil", int(any(c.decomp == "pencil" for c in cands)))
     assert int(vals["hit"]) == 1
     assert vals["has_hybrid"] == "1"
     assert vals["has_pencil"] == "0"
+
+
+def test_tune_4d_asymmetric_persists_heterogeneous_schedule():
+    """Tentpole acceptance: on a multi-hop 4-D hybrid whose hops have very
+    different communication costs (a calibrated profile with a slow "data"
+    link and a fast "model" link), the scheduler policy engine proposes a
+    per-hop schedule with *differing* entries, the tuner ranks it best,
+    tune() persists it through the wisdom cache (round-tripping the
+    schedule), old int-valued wisdom entries still read, and the winning
+    heterogeneous plan round-trips numerically.
+
+    Measurement is deterministic: the "hardware" is the per-hop cost model
+    itself (measure_candidate is replaced by the ranked prediction), the
+    same fake-clock philosophy the calibration tests use.
+    """
+    out = run_subprocess(TUNE_COMMON + """
+import json, warnings
+warnings.simplefilter("ignore")
+import repro.core.tuner as T
+from repro.core.perfmodel import CPU_CORE, MachineProfile
+from repro.core.plan import tuning_key
+
+grid = (4, 4, 32, 4)
+kinds = ("fft",) * 4
+# Asymmetric calibrated network: "data" all_to_alls are ~100x more
+# expensive per byte than "model" ones, compute is slow enough to hide
+# comm under (the chunked-overlap regime).
+prof = MachineProfile(base=CPU_CORE, platform="cpu", calibrated=True,
+                      net_calibrated=True,
+                      backend_flops=(("matmul", 1e4), ("xla", 3e5)),
+                      kind_scale=(("c2c", 1.0),), mem_bw=1e12,
+                      net_alpha_s=(("data", 3e-5), ("model", 1e-7)),
+                      net_bw=(("data", 1e6), ("model", 1e8)))
+
+cands = T.enumerate_candidates(grid, mesh, kinds, machine=prof)
+het = [c for c in cands if c.chunk_schedule is not None]
+print("hetero_enumerated", int(len(het) > 0))
+print("hetero_all_differ",
+      int(all(len(set(c.chunk_schedule)) > 1 for c in het)))
+ranked = T.rank_candidates(cands, grid, mesh, prof, kinds=kinds)
+print("argmin_hetero", int(ranked[0][1].chunk_schedule is not None))
+
+def fake_measure(cand, grid, mesh, kinds, dtype, **kw):
+    return T.rank_candidates([cand], grid, mesh, prof, 8,
+                             kinds=kinds)[0][0]
+T.measure_candidate = fake_measure
+plan = T.tune(grid, mesh, kinds=kinds, machine=prof,
+              cache=TuningCache(path), top_k=4)
+print("source", plan.source)
+print("winner_hetero", int(plan.chunk_schedule is not None
+                           and len(set(plan.chunk_schedule)) > 1))
+
+key = tuning_key(grid=grid, mesh_shape=(2, 4),
+                 mesh_axes=("data", "model"), kinds=kinds,
+                 dtype="complex64", inverse=False,
+                 platform=jax.default_backend())
+fresh = TuningCache(path)
+got = fresh.get(key)
+print("persisted", int(got is not None
+                       and got.chunk_schedule == plan.chunk_schedule))
+raw = json.load(open(path))
+print("json_list", int(isinstance(raw["plans"][key]["chunk_schedule"],
+                                  list)))
+# backward-compatible read of a pre-schedule (int-only) entry
+raw["plans"][key].pop("chunk_schedule")
+with open(path, "w") as f:
+    json.dump(raw, f)
+old = TuningCache(path).get(key)
+print("legacy_read", int(old is not None and old.chunk_schedule is None))
+
+# the heterogeneous winner round-trips numerically
+from repro.core import plan_fft
+p = plan_fft(mesh, grid, kinds=kinds, decomp=plan.decomp,
+             mesh_axes=plan.mesh_axes, dim_groups=plan.dim_groups,
+             n_chunks=plan.chunk_schedule)
+rng = np.random.default_rng(0)
+x4 = (rng.standard_normal(grid)
+      + 1j*rng.standard_normal(grid)).astype(np.complex64)
+y = p(jnp.asarray(x4))
+ref4 = np.fft.fftn(x4)
+print("fwd", float(np.max(np.abs(np.asarray(y) - ref4))
+                   / np.max(np.abs(ref4))))
+xb = p.inverse(y)
+print("rt", float(np.max(np.abs(np.asarray(xb) - x4))))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert vals["hetero_enumerated"] == "1"
+    assert vals["hetero_all_differ"] == "1"
+    assert vals["argmin_hetero"] == "1"
+    assert vals["source"] == "measured"
+    assert vals["winner_hetero"] == "1"
+    assert vals["persisted"] == "1"
+    assert vals["json_list"] == "1"
+    assert vals["legacy_read"] == "1"
+    assert float(vals["fwd"]) < 1e-5
+    assert float(vals["rt"]) < 1e-5
 
 
 def test_fft3d_tuning_auto_matches_numpy():
