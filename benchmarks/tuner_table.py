@@ -17,9 +17,19 @@ process — measures the union of both models' top-3 survivors, and reports
 per-model prediction/measurement rank agreement (pairwise concordance over
 the measured subset, and whether the model's argmin was the measured
 argmin).
+
+``--emit-json PATH`` instead writes a machine-keyed document of best-plan
+rows per backend (xla / matmul / pallas, the latter in interpret mode
+off-TPU) — the committed ``BENCH_tuner.json`` baseline.  ``--gate BASELINE``
+compares the freshly measured rows against that baseline and exits nonzero
+when any backend regressed by more than 20% *relative to the xla backend on
+the same grid in the same run* (absolute wall times are machine-specific;
+the xla-normalized ratio is the portable signal CI can gate on).
 """
 from __future__ import annotations
 
+import json
+import sys
 from itertools import combinations
 
 import jax
@@ -27,7 +37,11 @@ import jax
 from benchmarks.common import emit
 
 SHAPES = ((8, 8, 16), (16, 16, 32), (32, 32, 32))
+# Shapes for the JSON best-plan table: the biggest SHAPES entry is dropped
+# so the pallas-interpret rows keep the CI smoke cheap.
+JSON_SHAPES = ((8, 8, 16), (16, 16, 32))
 KINDS3 = ("fft", "fft", "fft")
+GATE_THRESHOLD = 0.20
 
 
 def _rank_agreement(ranked, measured):
@@ -149,5 +163,129 @@ def run() -> None:
                  f"argmin_hit={hit}")
 
 
+def _make_mesh():
+    from repro.compat import make_mesh
+    n_dev = len(jax.devices())
+    if n_dev >= 8:
+        return make_mesh((2, n_dev // 2), ("data", "model"))
+    return make_mesh((1, n_dev), ("data", "model"))
+
+
+def best_plan_rows(shapes=JSON_SHAPES) -> dict:
+    """Machine-keyed best-plan-per-backend table (the BENCH_tuner.json body).
+
+    For each grid and each tuner backend, the cost model picks that
+    backend's best candidate (decomp x mesh-axis order x chunk schedule)
+    and ``measure_candidate`` times its compiled executable.  Off-TPU the
+    pallas rows run the kernel in interpret mode (flagged per row), so the
+    table is regenerable on any host — including CI.
+    """
+    from repro.core import TuningCache
+    from repro.core.tuner import (BACKENDS, enumerate_candidates,
+                                  measure_candidate, rank_candidates,
+                                  resolve_profile)
+
+    mesh = _make_mesh()
+    prof = resolve_profile(TuningCache(path=None), mesh=mesh)
+    interpret = jax.default_backend() != "tpu"
+    rows = []
+    for grid in shapes:
+        kinds = ("fft",) * len(grid)
+        for backend in BACKENDS:
+            cands = enumerate_candidates(grid, mesh, kinds, machine=prof,
+                                         backends=(backend,))
+            ranked = rank_candidates(cands, grid, mesh, prof, kinds=kinds)
+            pred, cand = ranked[0]
+            # Best-of-10 (vs the tuner's default 3): the gate compares runs
+            # across CI invocations, so per-row noise must stay well under
+            # the 20% regression threshold.
+            t = measure_candidate(cand, grid, mesh, kinds,
+                                  jax.numpy.complex64, repeats=10)
+            rows.append({
+                "grid": "x".join(map(str, grid)),
+                "backend": backend,
+                "interpret": bool(interpret and backend == "pallas"),
+                "plan": cand.describe(),
+                "predicted_us": round(pred * 1e6, 1),
+                "measured_us": round(t * 1e6, 1),
+            })
+            emit(f"tuner_best_{backend}_{rows[-1]['grid']}", t * 1e6,
+                 cand.describe())
+    return {
+        "machine": {
+            "platform": jax.default_backend(),
+            "device_count": len(jax.devices()),
+            "mesh": list(mesh.devices.shape),
+        },
+        "rows": rows,
+    }
+
+
+def _ratios(doc: dict) -> dict:
+    """Per-(grid, backend) measured time normalized by the same grid's xla
+    row — the machine-portable quantity the delta gate compares."""
+    xla = {r["grid"]: r["measured_us"] for r in doc["rows"]
+           if r["backend"] == "xla"}
+    out = {}
+    for r in doc["rows"]:
+        base = xla.get(r["grid"])
+        if base and base > 0:
+            out[(r["grid"], r["backend"])] = r["measured_us"] / base
+    return out
+
+
+def gate(baseline: dict, current: dict,
+         threshold: float = GATE_THRESHOLD) -> list:
+    """Regression messages: any backend whose xla-normalized time grew by
+    more than ``threshold`` vs the committed baseline (shared keys only —
+    a smoke run gates just the grids it measured)."""
+    if baseline.get("machine", {}).get("mesh") != \
+            current.get("machine", {}).get("mesh"):
+        return []  # different mesh: ratios aren't comparable, skip gating
+    base_r, cur_r = _ratios(baseline), _ratios(current)
+    msgs = []
+    for key in sorted(set(base_r) & set(cur_r)):
+        grid, backend = key
+        if cur_r[key] > (1.0 + threshold) * base_r[key]:
+            msgs.append(
+                f"REGRESSION {backend}@{grid}: xla-normalized time "
+                f"{cur_r[key]:.2f}x vs baseline {base_r[key]:.2f}x "
+                f"(>{threshold:.0%} slower)")
+    return msgs
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--emit-json", metavar="PATH",
+                    help="write the best-plan-per-backend table as JSON")
+    ap.add_argument("--gate", metavar="BASELINE",
+                    help="compare against a committed BENCH_tuner.json; "
+                         "exit 1 on >20%% xla-normalized regression")
+    ap.add_argument("--smoke", action="store_true",
+                    help="measure only the smallest grid (CI)")
+    a = ap.parse_args(argv)
+    if not (a.emit_json or a.gate):
+        run()
+        return 0
+    doc = best_plan_rows(shapes=(JSON_SHAPES[:1] if a.smoke
+                                 else JSON_SHAPES))
+    if a.emit_json:
+        with open(a.emit_json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {a.emit_json} ({len(doc['rows'])} rows)")
+    if a.gate:
+        with open(a.gate) as f:
+            baseline = json.load(f)
+        msgs = gate(baseline, doc)
+        for m in msgs:
+            print(m)
+        if msgs:
+            return 1
+        print(f"gate ok vs {a.gate}")
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    sys.exit(main())

@@ -66,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding
 
+from . import transforms
 from .decomp import describe_decomp, make_decomposition, validate_grid
 from .pipeline import (PipelineSpec, build_pipeline, compile_pipeline,
                        input_struct, make_spec, output_struct)
@@ -454,6 +455,12 @@ def plan_fft(mesh: Mesh, grid: Sequence[int], *,
         else:
             decomp = ("pencil" if len(mesh.axis_names) >= ndim - 1
                       else "hybrid")
+    if backend is not None and backend not in transforms.LOCAL_BACKENDS:
+        # Validate up front with the supported set: an unknown backend used
+        # to fall through to an unhelpful failure deep in the pipeline.
+        raise ValueError(
+            f"plan_fft: unknown backend {backend!r}; supported backends: "
+            f"{', '.join(transforms.LOCAL_BACKENDS)}")
     backend = backend if backend is not None else "xla"
     chunk_schedule = None
     if n_chunks is None:

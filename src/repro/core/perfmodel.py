@@ -56,13 +56,19 @@ class MachineProfile:
     can actually measure on the running hardware:
 
     * ``backend_flops``  — sustained local-FFT FLOP/s per backend
-      ("xla" / "matmul"), from microbenchmarks of ``transforms.apply_1d``;
+      ("xla" / "matmul" / "pallas"), from microbenchmarks of
+      ``transforms.apply_1d``;
     * ``kind_scale``     — per kind-family ("c2c"/"r2c"/"r2r") multiplier on
-      compute time, measured on the **xla** backend relative to its analytic
-      flop ratios (an xla whose rfft is no faster than its fft yields
-      ``r2c ~= 2.0``) and applied to xla candidates only — matmul's kind
-      ratios are structural (full C2C rfft, double-length R2R) and its
-      measured correction lives in ``backend_flops``;
+      compute time.  Bare family keys are the **xla** backend's scales,
+      measured relative to its analytic flop ratios (an xla whose rfft is
+      no faster than its fft yields ``r2c ~= 2.0``).  ``"pallas:r2c"`` /
+      ``"pallas:r2r"`` are the pallas backend's own per-kind throughput
+      family (its rfft is structurally the full C2C, its R2R the
+      double-length four-step, but the *measured* ratios can still drift
+      from the analytic ones — e.g. the fused DCT twiddle epilogue), so
+      ``predict_plan_time``/``rank_candidates`` price pallas candidates
+      honestly instead of aliasing them to matmul.  Matmul carries no kind
+      keys: its measured correction lives entirely in ``backend_flops``;
     * ``mem_bw``         — streaming memory bandwidth (roofline denominator);
     * ``net_alpha_s`` / ``net_bw`` — per-mesh-axis all_to_all latency and
       bandwidth.  On a single-device axis these cannot be measured, so they
@@ -90,10 +96,33 @@ class MachineProfile:
         return self.base.overlap
 
     def flops_for(self, backend: str) -> float:
-        return dict(self.backend_flops).get(backend, self.base.flops)
+        rates = dict(self.backend_flops)
+        if backend in rates:
+            return rates[backend]
+        if backend == "pallas" and "matmul" in rates:
+            # Pre-pallas profiles (older wisdom files) carry no measured
+            # pallas rate.  The kernel runs the same four-step algorithm
+            # as the matmul backend, so that measured rate is the honest
+            # prior — falling through to base.flops would overprice
+            # pallas against backends the profile *did* measure.
+            return rates["matmul"]
+        return self.base.flops
 
-    def scale_for(self, family: str) -> float:
-        return dict(self.kind_scale).get(family, 1.0)
+    def scale_for(self, family: str, backend: str = "xla") -> float:
+        """Kind-family time multiplier for ``backend``.
+
+        Per-backend keys (``"pallas:r2c"``) take precedence; the bare
+        family keys are the xla scales (back-compat with stored profiles).
+        Backends without measured kind keys (matmul) get 1.0 — their
+        analytic ratios are structural.
+        """
+        scales = dict(self.kind_scale)
+        v = scales.get(f"{backend}:{family}")
+        if v is not None:
+            return v
+        if backend == "xla":
+            return scales.get(family, 1.0)
+        return 1.0
 
     def alpha_for(self, mesh_axis: str) -> float:
         return dict(self.net_alpha_s).get(mesh_axis, self.base.net_alpha_s)
@@ -148,12 +177,14 @@ def as_profile(machine) -> MachineProfile:
 def _line_flops(n: int, backend: str) -> float:
     """FLOPs of one C2C line of length n — the single source of truth.
 
-    "xla": 5 n log2 n butterflies.  "matmul": the four-step path's two
-    complex matmuls plus twiddle, ~8 real FLOPs per complex MAC over
-    n*(n1+n2) MACs — more raw FLOPs but MXU-shaped, which is what makes
-    the backend an autotuning decision.
+    "xla": 5 n log2 n butterflies.  "matmul"/"pallas": the four-step
+    path's two complex matmuls plus twiddle, ~8 real FLOPs per complex MAC
+    over n*(n1+n2) MACs — more raw FLOPs but MXU-shaped, which is what
+    makes the backend an autotuning decision (pallas runs the same
+    algorithm as an explicit kernel, so its flop count is identical; its
+    measured *rate* differs and lives in ``backend_flops``).
     """
-    if backend == "matmul":
+    if backend in ("matmul", "pallas"):
         from .transforms import factorize
         n1, n2 = factorize(n)
         return 8.0 * n * (n1 + n2)
@@ -240,12 +271,12 @@ def kind_dim_flops(eff_grid: Tuple[int, ...], grid: Tuple[int, ...], d: int,
     """FLOPs of transforming dim ``d`` of the whole (effective) grid once.
 
     Kind-aware: ``rfft`` runs at the *logical* length ``grid[d]`` and does
-    half the C2C butterflies (except the matmul backend, whose
-    ``transforms._rfft`` computes the full C2C and trims the Hermitian
-    half); ``dct2``/``dst2`` (and their inverses) are priced as the
-    double-length C2C they are composed from.  Line counts always come from
-    ``eff_grid`` — the R2C frequency pad changes the array the later stages
-    actually traverse.
+    half the C2C butterflies on xla only — the matmul and pallas backends'
+    ``_rfft`` computes the full C2C and trims the Hermitian half;
+    ``dct2``/``dst2`` (and their inverses) are priced as the double-length
+    C2C they are composed from.  Line counts always come from ``eff_grid``
+    — the R2C frequency pad changes the array the later stages actually
+    traverse.
     """
     n_all = 1.0
     for g in eff_grid:
@@ -254,7 +285,7 @@ def kind_dim_flops(eff_grid: Tuple[int, ...], grid: Tuple[int, ...], d: int,
     family = KIND_FAMILY.get(kind, "c2c")
     if family == "r2c":
         f = _line_flops(grid[d], backend)
-        if backend != "matmul":
+        if backend == "xla":
             f *= 0.5
     elif family == "r2r":
         f = _line_flops(2 * grid[d], backend)
@@ -295,12 +326,11 @@ def stage_comp_times(grid: Tuple[int, ...], decomp: Decomposition,
         flops = 0.0
         for d in stage.fft_dims:
             family = KIND_FAMILY.get(kinds[d], "c2c")
-            # kind_scale is measured against the XLA backend's analytic
-            # ratios (calibrate() benches rfft/dct2 on "xla"); applying it
-            # to matmul — whose kind_dim_flops already charges e.g. the
-            # full C2C for rfft — would double-count.  Matmul's measured
-            # correction lives entirely in backend_flops.
-            scale = prof.scale_for(family) if backend == "xla" else 1.0
+            # Per-backend kind scales: xla uses the bare family keys,
+            # pallas its own "pallas:<family>" throughput family, matmul
+            # none (its analytic ratios are structural; the measured
+            # correction lives entirely in backend_flops).
+            scale = prof.scale_for(family, backend)
             flops += kind_dim_flops(eff, grid, d, kinds[d], backend) * scale
         shape = local_shape(stage, eff, axis_sizes)
         touched = 2 * dtype_bytes
@@ -524,10 +554,12 @@ def calibrate(mesh=None, *, n: int = 256, batch: int = 1024,
     Microbenchmarks (all through ``transforms.apply_1d``, i.e. the code the
     pipeline actually runs):
 
-    * ``fft`` per backend ("xla"/"matmul") -> sustained FLOP/s per backend;
-    * ``rfft`` and ``dct2`` vs ``fft``       -> per-kind-family time scales,
-      normalized by the analytic flop ratios the pruning model assumes, so
-      a scale of 1.0 means "the model's ratio is right on this machine";
+    * ``fft`` per backend ("xla"/"matmul"/"pallas") -> sustained FLOP/s
+      per backend;
+    * ``rfft`` and ``dct2`` vs ``fft``       -> per-kind-family time scales
+      (for xla *and* pallas, each against its own analytic flop ratios),
+      normalized so a scale of 1.0 means "the model's ratio is right on
+      this machine";
     * an elementwise stream over 32 MiB     -> memory bandwidth;
     * ``all_to_all`` at two sizes per mesh axis with >1 device -> per-axis
       alpha/beta.  With no such axis (the 1-device case) the network terms
@@ -566,7 +598,7 @@ def calibrate(mesh=None, *, n: int = 256, batch: int = 1024,
 
     backend_flops: Dict[str, float] = {}
     bench_s: Dict[str, float] = {}
-    for backend in ("xla", "matmul"):
+    for backend in ("xla", "matmul", "pallas"):
         dt = bench("fft", backend, xc)
         bench_s[backend] = dt
         backend_flops[backend] = batch * _line_flops(n, backend) / dt
@@ -583,6 +615,19 @@ def calibrate(mesh=None, *, n: int = 256, batch: int = 1024,
     t_r2r = bench("dct2", "xla", xr)
     r2r_ratio = _line_flops(2 * n, "xla") / _line_flops(n, "xla")
     kind_scale["r2r"] = max((t_r2r / t_c2c) / r2r_ratio, 1e-6)
+
+    # The pallas backend's own per-kind throughput family, against *its*
+    # analytic ratios: rfft is structurally the full C2C (ratio 1.0), R2R
+    # the double-length four-step with the phase fused into the kernel
+    # epilogue.  Measured drift from those ratios (epilogue savings,
+    # interpret-mode overheads) lands here instead of distorting
+    # backend_flops["pallas"].
+    t_pc2c = bench_s["pallas"]
+    kind_scale["pallas:r2c"] = max(bench("rfft", "pallas", xr) / t_pc2c,
+                                   1e-6)
+    p_r2r_ratio = (_line_flops(2 * n, "pallas") / _line_flops(n, "pallas"))
+    kind_scale["pallas:r2r"] = max(
+        (bench("dct2", "pallas", xr) / t_pc2c) / p_r2r_ratio, 1e-6)
 
     big = jnp.zeros((1 << 23,), jnp.float32)  # 32 MiB
     stream = jax.jit(lambda a: a * np.float32(1.0000001))

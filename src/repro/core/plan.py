@@ -129,7 +129,7 @@ class TunedPlan:
 
     decomp: str                  # "pencil" | "slab" | "hybrid"
     mesh_axes: Tuple[str, ...]   # mesh axes the decomposition runs over
-    backend: str                 # "xla" | "matmul"
+    backend: str                 # "xla" | "matmul" | "pallas"
     n_chunks: int
     predicted_s: float           # perfmodel estimate
     measured_s: float            # compiled-executable timing (0.0 if none)

@@ -1,19 +1,24 @@
 """Local (on-device) 1D/2D transforms: C2C, R2C and R2R (DCT/DST).
 
-Two interchangeable backends:
+Three interchangeable backends (``LOCAL_BACKENDS``):
 
 * ``"xla"``    — ``jnp.fft.*``.  On TPU this lowers to the XLA Fft HLO; on the
   CPU test runtime it is the numerically-trusted path.
 * ``"matmul"`` — the four-step factorization N = N1*N2 executed as two small
   DFT-matrix matmuls plus a fused twiddle, with complex numbers carried as
   separate real/imag planes.  This is the TPU-native formulation (MXU work
-  instead of VPU butterflies); ``kernels/fft_matmul.py`` is the same algorithm
-  as an explicit Pallas kernel.
+  instead of VPU butterflies) expressed as pure jnp ops.
+* ``"pallas"`` — the same four-step algorithm as an explicit Pallas kernel
+  (``kernels/fft_matmul.py``, wrapped by ``kernels/ops.py``), with fused
+  epilogues for the DCT phase twiddle and the pre-redistribution
+  transpose-pack.  Off-TPU it runs in interpret mode so tests stay hermetic.
 
-R2R transforms (DCT-II/III, DST-II/III) are composed from the complex FFT with
-the standard even/odd reordering identities, so they inherit whichever backend
-is selected.  All transforms operate along ``axis`` of an arbitrarily-batched
-array.
+R2C/R2R transforms are composed from the complex FFT with the standard
+even/odd reordering identities, so they inherit whichever backend is
+selected.  Complex working dtypes are derived from the input
+(``jnp.result_type(x.dtype, complex64)``), so float64 inputs under
+``jax.enable_x64`` stay in double precision on every backend.  All
+transforms operate along ``axis`` of an arbitrarily-batched array.
 """
 from __future__ import annotations
 
@@ -29,6 +34,9 @@ C2C_KINDS = ("fft", "ifft")
 R2C_KINDS = ("rfft", "irfft")
 R2R_KINDS = ("dct2", "dct3", "dst2", "dst3")
 ALL_KINDS = C2C_KINDS + R2C_KINDS + R2R_KINDS
+
+#: Every local-FFT backend ``apply_1d`` (and hence the tuner) accepts.
+LOCAL_BACKENDS = ("xla", "matmul", "pallas")
 
 
 def factorize(n: int) -> Tuple[int, int]:
@@ -139,9 +147,20 @@ def _move_last(x: jax.Array, axis: int):
 def _c2c(x: jax.Array, axis: int, *, inverse: bool, backend: str) -> jax.Array:
     if backend == "xla":
         return (jnp.fft.ifft if inverse else jnp.fft.fft)(x, axis=axis)
+    if backend == "pallas":
+        # Deferred import: kernels/fft_matmul.py imports ``factorize`` from
+        # this module, so a top-level import here would be circular.
+        from repro.kernels import ops
+        return (ops.ifft1d if inverse else ops.fft1d)(x, axis)
+    if backend != "matmul":
+        raise ValueError(f"unknown backend {backend!r}; supported local-FFT "
+                         f"backends: {LOCAL_BACKENDS}")
     xm, axis = _move_last(x, axis)
-    out = _matmul_fft(xm.astype(jnp.complex64) if not jnp.iscomplexobj(xm) else xm,
-                      inverse=inverse)
+    if not jnp.iscomplexobj(xm):
+        # Promote to the complex dtype matching the input precision — a bare
+        # complex64 cast here silently dropped float64 inputs under x64.
+        xm = xm.astype(jnp.result_type(xm.dtype, jnp.complex64))
+    out = _matmul_fft(xm, inverse=inverse)
     return jnp.moveaxis(out, -1, axis)
 
 
@@ -149,8 +168,9 @@ def _rfft(x: jax.Array, axis: int, backend: str) -> jax.Array:
     if backend == "xla":
         return jnp.fft.rfft(x, axis=axis)
     # Hermitian trim of the full C2C result (flop-wasteful but TPU-simple;
-    # the distributed pipeline pads the frequency dim anyway).
-    full = _c2c(x.astype(jnp.complex64), axis, inverse=False, backend=backend)
+    # the distributed pipeline pads the frequency dim anyway).  ``_c2c``
+    # promotes real inputs to the precision-matching complex dtype.
+    full = _c2c(x, axis, inverse=False, backend=backend)
     n = x.shape[axis]
     return jax.lax.slice_in_dim(full, 0, n // 2 + 1, axis=axis)
 
@@ -162,7 +182,7 @@ def _irfft(x: jax.Array, axis: int, n: int, backend: str) -> jax.Array:
     xm, ax = _move_last(x, axis)
     body = jnp.conj(xm[..., 1:n - n // 2])[..., ::-1]
     full = jnp.concatenate([xm, body], axis=-1)
-    out = _matmul_fft(full, inverse=True)
+    out = _c2c(full, -1, inverse=True, backend=backend)
     return jnp.moveaxis(jnp.real(out), -1, ax)
 
 
@@ -180,11 +200,17 @@ def _dct2(x: jax.Array, axis: int, backend: str) -> jax.Array:
     v = jnp.concatenate([xm[..., 0::2], xm[..., 1::2][..., ::-1]], axis=-1)
     # Promote to the complex dtype MATCHING the input precision: float64
     # pipelines (x64) must not round-trip through complex64.
-    vf = _c2c(v.astype(jnp.result_type(v.dtype, jnp.complex64)), -1,
-              inverse=False, backend=backend)
+    cdt = jnp.result_type(v.dtype, jnp.complex64)
     k = jnp.arange(n)
-    phase = jnp.exp(-1j * jnp.pi * k / (2.0 * n)).astype(vf.dtype)
-    out = 2.0 * jnp.real(phase * vf)
+    phase = jnp.exp(-1j * jnp.pi * k / (2.0 * n)).astype(cdt)
+    if backend == "pallas":
+        # Fused epilogue: the kernel applies the DCT phase in-register
+        # instead of a separate elementwise pass over the FFT output.
+        from repro.kernels import ops
+        pv = ops.fft1d(v.astype(cdt), -1, twiddle=phase)
+    else:
+        pv = phase * _c2c(v.astype(cdt), -1, inverse=False, backend=backend)
+    out = 2.0 * jnp.real(pv)
     return jnp.moveaxis(out.astype(x.dtype), -1, ax)
 
 
@@ -228,6 +254,9 @@ def _dst3(x: jax.Array, axis: int, backend: str) -> jax.Array:
 def apply_1d(x: jax.Array, axis: int, kind: str, *, backend: str = "xla",
              irfft_n: int | None = None) -> jax.Array:
     """Apply one transform along ``axis``.  ``kind`` in ALL_KINDS."""
+    if backend not in LOCAL_BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; supported local-FFT "
+                         f"backends: {LOCAL_BACKENDS}")
     if kind == "fft":
         return _c2c(x, axis, inverse=False, backend=backend)
     if kind == "ifft":

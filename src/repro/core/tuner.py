@@ -8,10 +8,11 @@ runtime should choose.  ``tune()`` closes that loop for one problem key
 1. **enumerate** candidate plans — decomposition in {pencil, slab, hybrid}
    (hybrid: every contiguous stage grouping of the dims, the
    pencil-over-k-axes family) over every mesh-axis ordering that divides
-   the grid, backend in {xla, matmul}, ``n_chunks`` in powers of two up to
-   the free-dim size, plus — for multi-hop plans — the **per-hop chunk
-   schedule** the scheduler policy engine proposes from the calibrated
-   cost model (``scheduler.choose_chunk_schedule``: Eq. 7 argmin per hop);
+   the grid, backend in {xla, matmul, pallas}, ``n_chunks`` in powers of
+   two up to the free-dim size, plus — for multi-hop plans — the **per-hop
+   chunk schedule** the scheduler policy engine proposes from the
+   calibrated cost model (``scheduler.choose_chunk_schedule``: Eq. 7
+   argmin per hop);
 2. **prune** them with the LogP/roofline model (`perfmodel.predict_plan_time`)
    down to the ``top_k`` most promising survivors;
 3. **measure** each survivor's compiled executable (the measurement also
@@ -66,7 +67,10 @@ from .pipeline import (PipelineSpec, chunk_sites, compile_pipeline,
 from .plan import (TunedPlan, TuningCache, global_tuning_cache, tuning_key)
 from .scheduler import choose_chunk_schedule
 
-BACKENDS = ("xla", "matmul")
+# The tuner's full backend space — mirrors ``transforms.LOCAL_BACKENDS``.
+# "pallas" is the explicit MXU kernel (kernels/fft_matmul.py) with fused
+# twiddle/pack epilogues; off-TPU it runs in interpret mode.
+BACKENDS = ("xla", "matmul", "pallas")
 OBJECTIVES = ("forward", "fwd+scale+inv")
 
 

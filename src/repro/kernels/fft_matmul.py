@@ -10,10 +10,33 @@ N = N1*N2 and evaluates
 as two dense DFT-matrix contractions (MXU) with a fused elementwise twiddle
 (VPU), on separate real/imag planes (no complex datapath on the MXU).
 
+This is the kernel behind ``backend="pallas"`` — the tuner's third local-FFT
+backend (``kernels/ops.py`` wraps it; ``core/transforms.apply_1d`` routes to
+it).  Two **fused epilogues** extend the basic transform so a pipeline stage
+can finish inside the kernel instead of paying another memory round trip
+over the array:
+
+* ``twiddle=(er, ei)`` — an extra elementwise complex multiply along the
+  output axis, applied in-register after step 4.  The DCT-II phase factor
+  (``transforms._dct2``) rides here, so an R2R stage's post-FFT phase pass
+  never touches HBM separately.
+* ``pack_parts=p`` — the transpose-pack that precedes a ``RedistHop``:
+  the final store writes the output pre-split into ``p`` contiguous
+  per-destination blocks, shape ``(B, p, N//p)`` — exactly the layout the
+  following ``lax.all_to_all(tiled=True)`` ships, so the pack pass between
+  a stage's FFT and its redistribution folds into the kernel's epilogue.
+
 Layout: the batch dim is tiled over the grid; each program loads a
-(TB, N1, N2) block of both planes into VMEM together with the three small
-constant operands (W1: N1xN1, W2: N2xN2, T: N1xN2 — broadcast to every
-program via a constant index_map).  All contractions accumulate in f32.
+(TB, N1, N2) block of both planes into VMEM together with the small
+constant operands (W1: N1xN1, W2: N2xN2, T: N1xN2, optional epilogue
+twiddle 1xN — broadcast to every program via a constant index_map).  The
+chunked-overlap pipeline feeds the same kernel per-chunk ``(TB, N1, N2)``
+blocks — a chunk is just a smaller batch, re-tiled by ``batch_tile``.
+
+Precision follows the input planes: float32 planes contract in f32 (the
+MXU path); float64 planes (an x64 pipeline) build the DFT/twiddle operands
+in f64 and accumulate in f64 — supported in ``interpret`` mode and on
+backends with an f64 datapath; real MXUs run the f32 variant.
 
 VMEM budget per program (f32): 2*TB*N (in) + 2*TB*N (out) + 2*TB*N (scratch
 peak) + matrices ~= 6*TB*N*4 bytes; TB=128, N=1024 -> ~3.1 MiB, comfortably
@@ -24,7 +47,7 @@ of letting N2 exceed 128.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,8 +59,13 @@ from repro.core.transforms import factorize
 DEFAULT_BATCH_TILE = 128
 
 
-def _planes(n1: int, n2: int, inverse: bool) -> Tuple[np.ndarray, ...]:
-    """Constant operands: DFT(N1), DFT(N2) and the twiddle, as cos/sin planes."""
+def _planes(n1: int, n2: int, inverse: bool,
+            dtype: str = "float32") -> Tuple[np.ndarray, ...]:
+    """Constant operands: DFT(N1), DFT(N2) and the twiddle, as cos/sin planes.
+
+    Built in float64 and cast to ``dtype`` so f32 runs see a well-rounded
+    operand; x64 pipelines keep the full double-precision phases.
+    """
     n = n1 * n2
     sign = 1.0 if inverse else -1.0
     j1 = np.arange(n1, dtype=np.float64)
@@ -45,17 +73,23 @@ def _planes(n1: int, n2: int, inverse: bool) -> Tuple[np.ndarray, ...]:
     th1 = (sign * 2 * np.pi / n1) * np.outer(j1, j1)
     th2 = (sign * 2 * np.pi / n2) * np.outer(j2, j2)
     tht = (sign * 2 * np.pi / n) * np.outer(j1, j2)
-    f32 = np.float32
-    return (np.cos(th1).astype(f32), np.sin(th1).astype(f32),
-            np.cos(th2).astype(f32), np.sin(th2).astype(f32),
-            np.cos(tht).astype(f32), np.sin(tht).astype(f32))
+    return (np.cos(th1).astype(dtype), np.sin(th1).astype(dtype),
+            np.cos(th2).astype(dtype), np.sin(th2).astype(dtype),
+            np.cos(tht).astype(dtype), np.sin(tht).astype(dtype))
 
 
-def _fft_kernel(xr_ref, xi_ref, w1r_ref, w1i_ref, w2r_ref, w2i_ref,
-                tr_ref, ti_ref, outr_ref, outi_ref, *, n1: int, n2: int,
-                inverse: bool):
+def _fft_kernel(*refs, n1: int, n2: int, inverse: bool,
+                fused_twiddle: bool, pack_parts: Optional[int]):
+    if fused_twiddle:
+        (xr_ref, xi_ref, w1r_ref, w1i_ref, w2r_ref, w2i_ref,
+         tr_ref, ti_ref, er_ref, ei_ref, outr_ref, outi_ref) = refs
+    else:
+        (xr_ref, xi_ref, w1r_ref, w1i_ref, w2r_ref, w2i_ref,
+         tr_ref, ti_ref, outr_ref, outi_ref) = refs
+        er_ref = ei_ref = None
     tb = xr_ref.shape[0]
     n = n1 * n2
+    acc = xr_ref.dtype  # f32 planes accumulate in f32, f64 (x64) in f64
     xr = xr_ref[...].reshape(tb, n1, n2)
     xi = xi_ref[...].reshape(tb, n1, n2)
     w1r, w1i = w1r_ref[...], w1i_ref[...]
@@ -66,7 +100,7 @@ def _fft_kernel(xr_ref, xi_ref, w1r_ref, w1i_ref, w2r_ref, w2i_ref,
 
     def dot1(a, w):  # (tb, n1, n2) x (n1, n1) -> (tb, n2, k1)
         return jax.lax.dot_general(a, w, dimension_numbers=dn,
-                                   preferred_element_type=jnp.float32)
+                                   preferred_element_type=acc)
 
     # step 1: F1[b, m2, k1] = sum_m1 x[b, m1, m2] W1[k1, m1]
     f1r = dot1(xr, w1r) - dot1(xi, w1i)
@@ -81,7 +115,7 @@ def _fft_kernel(xr_ref, xi_ref, w1r_ref, w1i_ref, w2r_ref, w2i_ref,
     # step 3: F2[b, k1, k2] = sum_m2 G[b, m2, k1] W2[k2, m2]
     def dot2(a, w):  # (tb, n2, n1) x (n2, n2) -> (tb, n1, k2)
         return jax.lax.dot_general(a, w, dimension_numbers=dn,
-                                   preferred_element_type=jnp.float32)
+                                   preferred_element_type=acc)
 
     f2r = dot2(g_r, w2r) - dot2(g_i, w2i)
     f2i = dot2(g_r, w2i) + dot2(g_i, w2r)
@@ -89,25 +123,63 @@ def _fft_kernel(xr_ref, xi_ref, w1r_ref, w1i_ref, w2r_ref, w2i_ref,
     # step 4: X[k1 + N1*k2] -> row-major layout [k2, k1]
     outr = jnp.swapaxes(f2r, 1, 2).reshape(tb, n)
     outi = jnp.swapaxes(f2i, 1, 2).reshape(tb, n)
+    if fused_twiddle:
+        # epilogue A: extra elementwise complex multiply along the output
+        # axis (e.g. the DCT-II phase), in-register — no extra HBM pass.
+        er, ei = er_ref[...], ei_ref[...]  # (1, n), broadcast over batch
+        outr, outi = outr * er - outi * ei, outr * ei + outi * er
     if inverse:
         outr = outr * (1.0 / n)
         outi = outi * (1.0 / n)
-    outr_ref[...] = outr
-    outi_ref[...] = outi
+    if pack_parts is not None:
+        # epilogue B: transpose-pack — store the output pre-split into the
+        # contiguous per-destination blocks the next all_to_all sends.
+        outr_ref[...] = outr.reshape(tb, pack_parts, n // pack_parts)
+        outi_ref[...] = outi.reshape(tb, pack_parts, n // pack_parts)
+    else:
+        outr_ref[...] = outr
+        outi_ref[...] = outi
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("inverse", "batch_tile", "interpret"))
+                   static_argnames=("inverse", "batch_tile", "interpret",
+                                    "pack_parts"))
 def fft1d_planes(xr: jax.Array, xi: jax.Array, *, inverse: bool = False,
                  batch_tile: int = DEFAULT_BATCH_TILE,
-                 interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+                 interpret: bool = True,
+                 twiddle: Optional[Tuple[jax.Array, jax.Array]] = None,
+                 pack_parts: Optional[int] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
     """Batched last-axis FFT of (B, N) real/imag planes via the Pallas kernel.
 
-    ``interpret=True`` runs the kernel body in Python on CPU (this container
-    has no TPU); on real hardware pass ``interpret=False``.
+    Precision follows the planes' dtype: float32 in/out for f32 (and lower)
+    inputs, float64 end-to-end when the planes are f64 (x64 pipelines).
+
+    ``twiddle=(er, ei)`` fuses an extra elementwise complex multiply along
+    the output axis into the kernel epilogue (cos/sin planes of shape
+    ``(N,)``).  ``pack_parts=p`` fuses the pre-redistribution transpose-pack:
+    the result comes back as ``(B, p, N//p)`` — the ``p`` contiguous
+    per-destination blocks a following ``all_to_all(tiled=True)`` ships —
+    written directly by the kernel's final store.
+
+    ``B == 0`` returns an empty result of the right shape/dtype (a chunked
+    pipeline may legally feed an empty residual block).  ``interpret=True``
+    runs the kernel body as traced jax ops on CPU (this container has no
+    TPU); on real hardware pass ``interpret=False``.
     """
     b, n = xr.shape
     n1, n2 = factorize(n)
+    dt = jnp.result_type(xr.dtype, jnp.float32)
+    if pack_parts is not None and (pack_parts < 1 or n % pack_parts):
+        raise ValueError(
+            f"pack_parts={pack_parts} does not evenly split N={n}")
+    out_shape = ((b, n) if pack_parts is None
+                 else (b, pack_parts, n // pack_parts))
+    if b == 0:
+        # Zero-batch guard: min(batch_tile, 0) would build a zero grid and
+        # divide by zero in the pad computation below.
+        empty = jnp.zeros(out_shape, dt)
+        return empty, empty
     tb = min(batch_tile, b)
     if b % tb != 0:
         # pad batch to a tile multiple; trimmed below
@@ -115,22 +187,41 @@ def fft1d_planes(xr: jax.Array, xi: jax.Array, *, inverse: bool = False,
         xr = jnp.pad(xr, ((0, pad), (0, 0)))
         xi = jnp.pad(xi, ((0, pad), (0, 0)))
     bp = xr.shape[0]
-    w = _planes(n1, n2, inverse)
+    w = _planes(n1, n2, inverse, dtype=str(dt))
 
     grid = (bp // tb,)
-    batch_spec = pl.BlockSpec((tb, n), lambda i: (i, 0))
+    in_batch_spec = pl.BlockSpec((tb, n), lambda i: (i, 0))
     const = lambda r, c: pl.BlockSpec((r, c), lambda i: (0, 0))
+    if pack_parts is None:
+        out_spec = in_batch_spec
+        out_block = (bp, n)
+    else:
+        out_spec = pl.BlockSpec((tb, pack_parts, n // pack_parts),
+                                lambda i: (i, 0, 0))
+        out_block = (bp, pack_parts, n // pack_parts)
+
+    in_specs = [in_batch_spec, in_batch_spec,
+                const(n1, n1), const(n1, n1),
+                const(n2, n2), const(n2, n2),
+                const(n1, n2), const(n1, n2)]
+    operands = [xr.astype(dt), xi.astype(dt),
+                *(jnp.asarray(p) for p in w)]
+    fused_twiddle = twiddle is not None
+    if fused_twiddle:
+        er, ei = twiddle
+        in_specs += [const(1, n), const(1, n)]
+        operands += [jnp.asarray(er).astype(dt).reshape(1, n),
+                     jnp.asarray(ei).astype(dt).reshape(1, n)]
 
     outr, outi = pl.pallas_call(
-        functools.partial(_fft_kernel, n1=n1, n2=n2, inverse=inverse),
+        functools.partial(_fft_kernel, n1=n1, n2=n2, inverse=inverse,
+                          fused_twiddle=fused_twiddle,
+                          pack_parts=pack_parts),
         grid=grid,
-        in_specs=[batch_spec, batch_spec,
-                  const(n1, n1), const(n1, n1),
-                  const(n2, n2), const(n2, n2),
-                  const(n1, n2), const(n1, n2)],
-        out_specs=[batch_spec, batch_spec],
-        out_shape=[jax.ShapeDtypeStruct((bp, n), jnp.float32),
-                   jax.ShapeDtypeStruct((bp, n), jnp.float32)],
+        in_specs=in_specs,
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct(out_block, dt),
+                   jax.ShapeDtypeStruct(out_block, dt)],
         interpret=interpret,
-    )(xr.astype(jnp.float32), xi.astype(jnp.float32), *map(jnp.asarray, w))
+    )(*operands)
     return outr[:b], outi[:b]

@@ -1,13 +1,23 @@
 """jit'd public wrappers around the Pallas kernels.
 
-``fft1d`` / ``ifft1d`` take complex arrays of any rank and transform along
-``axis`` using the MXU four-step kernel; they are drop-in replacements for
-``jnp.fft.fft`` in the core pipeline (``backend="pallas"`` would route here
-on real TPUs — the shipped pipeline defaults to the pure-jnp matmul path,
-which compiles to the same MXU contractions, because ``interpret=True``
-Pallas execution is Python-speed on this CPU container).
+``fft1d`` / ``ifft1d`` take complex (or real) arrays of any rank and
+transform along ``axis`` using the MXU four-step kernel.  They are the
+routing target of ``backend="pallas"``: ``core/transforms.apply_1d``
+dispatches every C2C line of the pallas backend here, and
+``core/pipeline._stage_transform`` additionally threads the fused
+epilogues through (``twiddle=`` for the DCT-II/DST-II phase,
+``pack_parts=`` for the transpose-pack feeding the next ``RedistHop``'s
+all_to_all).
+
+``interpret`` defaults to ``None`` = "interpret unless running on a TPU":
+off-TPU (this CPU container, CI) the kernel body executes as traced jax
+ops so the suite stays hermetic; on real hardware the same call sites
+compile the Mosaic kernel.  Output dtype follows the input — complex64
+in/out for single precision, complex128 end-to-end under ``jax.enable_x64``.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -15,26 +25,66 @@ import jax.numpy as jnp
 from .fft_matmul import fft1d_planes
 
 
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
 def _apply(x: jax.Array, axis: int, *, inverse: bool,
-           interpret: bool = True) -> jax.Array:
+           interpret: Optional[bool] = None,
+           twiddle: Optional[jax.Array] = None,
+           pack_parts: Optional[int] = None) -> jax.Array:
+    interpret = _resolve_interpret(interpret)
     axis = axis % x.ndim
     xm = jnp.moveaxis(x, axis, -1)
     lead = xm.shape[:-1]
     n = xm.shape[-1]
-    flat_r = jnp.real(xm).reshape(-1, n)
-    flat_i = jnp.imag(xm).reshape(-1, n) if jnp.iscomplexobj(xm) \
+    cdt = jnp.result_type(x.dtype, jnp.complex64)
+    rdt = jnp.finfo(cdt).dtype
+    if xm.size == 0:
+        # Empty batch (or empty line): nothing to transform — mirror the
+        # kernel's own guard so callers get the right shape/dtype back.
+        # (Checked before the flatten: reshape(-1, 0) is itself an error.)
+        return jnp.moveaxis(jnp.zeros(lead + (n,), cdt), -1, axis)
+    flat_r = jnp.real(xm).astype(rdt).reshape(-1, n)
+    flat_i = jnp.imag(xm).astype(rdt).reshape(-1, n) if jnp.iscomplexobj(xm) \
         else jnp.zeros_like(flat_r)
+    tw = None
+    if twiddle is not None:
+        t = jnp.asarray(twiddle).reshape(-1)
+        tw = (jnp.real(t).astype(rdt), jnp.imag(t).astype(rdt))
     outr, outi = fft1d_planes(flat_r, flat_i, inverse=inverse,
-                              interpret=interpret)
+                              interpret=interpret, twiddle=tw,
+                              pack_parts=pack_parts)
     out = jax.lax.complex(outr, outi).reshape(lead + (n,))
     return jnp.moveaxis(out, -1, axis)
 
 
-def fft1d(x: jax.Array, axis: int = -1, *, interpret: bool = True) -> jax.Array:
-    """Forward FFT along ``axis`` via the Pallas MXU kernel."""
-    return _apply(x, axis, inverse=False, interpret=interpret)
+def fft1d(x: jax.Array, axis: int = -1, *,
+          interpret: Optional[bool] = None,
+          twiddle: Optional[jax.Array] = None,
+          pack_parts: Optional[int] = None) -> jax.Array:
+    """Forward FFT along ``axis`` via the Pallas MXU kernel.
+
+    ``twiddle`` — optional complex ``(n,)`` phase fused into the kernel
+    epilogue (the result is ``twiddle * fft(x)`` elementwise along ``axis``).
+    ``pack_parts`` — fuse the pre-all_to_all transpose-pack: the kernel
+    stores the transformed axis pre-split into ``pack_parts`` contiguous
+    blocks; the returned array still has the logical shape (the packed
+    layout is a free reshape of the kernel's output buffer).
+    """
+    return _apply(x, axis, inverse=False, interpret=interpret,
+                  twiddle=twiddle, pack_parts=pack_parts)
 
 
-def ifft1d(x: jax.Array, axis: int = -1, *, interpret: bool = True) -> jax.Array:
-    """Inverse FFT along ``axis`` via the Pallas MXU kernel."""
-    return _apply(x, axis, inverse=True, interpret=interpret)
+def ifft1d(x: jax.Array, axis: int = -1, *,
+           interpret: Optional[bool] = None,
+           twiddle: Optional[jax.Array] = None,
+           pack_parts: Optional[int] = None) -> jax.Array:
+    """Inverse FFT along ``axis`` via the Pallas MXU kernel.
+
+    Accepts the same fused-epilogue options as :func:`fft1d`.
+    """
+    return _apply(x, axis, inverse=True, interpret=interpret,
+                  twiddle=twiddle, pack_parts=pack_parts)

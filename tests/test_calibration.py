@@ -159,8 +159,9 @@ def test_calibrate_roundtrip_and_honest_flags(tmp_path):
     # single-device process: network terms fell back to model defaults
     assert prof.net_calibrated is False
     assert prof.net_alpha_s == () and prof.net_bw == ()
-    assert dict(prof.backend_flops).keys() == {"xla", "matmul"}
-    assert set(dict(prof.kind_scale)) == {"c2c", "r2c", "r2r"}
+    assert dict(prof.backend_flops).keys() == {"xla", "matmul", "pallas"}
+    assert set(dict(prof.kind_scale)) == {"c2c", "r2c", "r2r",
+                                          "pallas:r2c", "pallas:r2r"}
     assert all(v > 0 for _, v in prof.backend_flops)
     assert prof.mem_bw > 0
 
