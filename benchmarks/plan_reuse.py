@@ -14,9 +14,39 @@ must have lower per-call overhead than the legacy wrapper path, and
 * ``plan_sharded_in``   — ``plan.forward(..., sharded_in=True)`` on a
   pre-sharded input (execute only; the zero-copy pipeline path).
 
+The second block is the **plan-stream executor** acceptance bench: mixed
+heterogeneous queues (several batched 2-D plans + one 3-D plan) run once
+per backend, reporting
+
+* ``queue throughput`` — entries per second through one interleaved
+  ``PlanStreamExecutor.run``;
+* ``overlap efficiency`` — interleaved wall divided by the sum of solo
+  walls (each best-of-N), where each *solo* wall drives the **same
+  segmented executor machinery** with a one-entry queue and blocks (the
+  standard pipelining
+  metric: both paths pay identical per-segment work, so the ratio isolates
+  what interleaving buys — scheduling amortization plus dispatch hidden
+  under compute).  < 1 means interleaving wins; the executor acceptance
+  row requires < 0.95 on at least one backend;
+* ``overlap efficiency (model)`` — the ``ScheduleSimulator`` prediction
+  for the interleaving the executor chose (``report()["predicted"]``).
+
+``--emit-json PATH`` writes the machine-keyed queue rows — the committed
+``BENCH_exec.json`` baseline.  ``--gate BASELINE`` compares fresh rows
+against it and exits nonzero when a queue's overlap efficiency regressed
+by more than 20% *and* crossed parity (>= 1.0: interleaving no longer
+beats solo-sum at all) — the same mesh-mismatch skip and
+ratio-over-absolute philosophy as ``tuner_table.py --gate``.  Sub-parity
+efficiency drift is shared-runner timing noise; the smoke's own
+< 0.95 assertion keeps the acceptance threshold honest.
+
 Run:  PYTHONPATH=src python -m benchmarks.plan_reuse [--smoke]
+                [--emit-json PATH] [--gate BASELINE]
 """
 from __future__ import annotations
+
+import json
+import time
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +57,14 @@ from .common import emit, time_fn
 
 N = 32
 ITERS = 30
+# Executor queues: (name, batch, 2-D edge, 3-D edge).  Three batched 2-D
+# entries + one 3-D entry each.  The small queue is overhead-dominated —
+# where interleaving pays hardest on a single-core host — the larger one
+# keeps a compute-bound row in the table.
+QUEUES = (("mixed_small", 4, 32, 16), ("mixed", 8, 64, 32))
+EXEC_BACKENDS = ("xla", "matmul")
+QUEUE_ITERS = 15
+GATE_THRESHOLD = 0.20
 
 
 def run(iters: int = ITERS) -> dict:
@@ -67,24 +105,172 @@ def run(iters: int = ITERS) -> dict:
             "sharded": t_sharded}
 
 
-def main() -> None:
+def _mixed_queue(mesh, batch: int, n2: int, n3: int, backend: str):
+    """Three batched 2-D entries + one 3-D entry, all on ``backend``."""
+    from repro.core import plan_fft
+    rng = np.random.default_rng(0)
+
+    def cx(shape):
+        return jnp.asarray((rng.standard_normal(shape)
+                            + 1j * rng.standard_normal(shape)
+                            ).astype(np.complex64))
+    p2d = plan_fft(mesh, (n2, n2), batch_shape=(batch,), backend=backend)
+    p3d = plan_fft(mesh, (n3, n3, n3), backend=backend)
+    return ([(p2d, cx((batch, n2, n2))) for _ in range(3)]
+            + [(p3d, cx((n3, n3, n3)))])
+
+
+def _best_wall(fn, iters: int) -> float:
+    """Best-of-N wall seconds — the same noise filter ``tuner_table``'s
+    rows use (wall-time noise is one-sided on a shared host; the min is
+    the stable estimator the 20% delta gate needs)."""
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(min(ts))
+
+
+def queue_rows(iters: int = QUEUE_ITERS,
+               backends=EXEC_BACKENDS) -> dict:
+    """Machine-keyed executor-queue table (the BENCH_exec.json body)."""
+    from repro.core import PlanStreamExecutor
+
+    mesh = make_mesh((1, 1), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+    rows = []
+    for name, batch, n2, n3 in QUEUES:
+        for backend in backends:
+            entries = _mixed_queue(mesh, batch, n2, n3, backend)
+
+            def solo_sum():
+                for plan, x in entries:
+                    ex = PlanStreamExecutor()
+                    ex.submit(plan, x)
+                    jax.block_until_ready(ex.run())
+
+            def interleaved():
+                ex = PlanStreamExecutor()
+                for plan, x in entries:
+                    ex.submit(plan, x)
+                jax.block_until_ready(ex.run())
+                return ex
+
+            solo_sum()                         # compile + warm both paths
+            interleaved()
+            t_solo = _best_wall(solo_sum, iters)
+            t_inter = _best_wall(interleaved, iters)
+            ex = interleaved()                 # a report for the model row
+            model_eff = ex.report()["predicted"]["overlap_efficiency"]
+            eff = t_inter / t_solo
+            rows.append({
+                "queue": name,
+                "backend": backend,
+                "entries": len(entries),
+                "solo_sum_us": round(t_solo * 1e6, 1),
+                "interleaved_us": round(t_inter * 1e6, 1),
+                "queue_throughput_per_s": round(len(entries) / t_inter, 1),
+                "overlap_efficiency": round(eff, 4),
+                "overlap_efficiency_model": round(model_eff, 4),
+            })
+            emit(f"exec_queue_{name}_{backend}", t_inter * 1e6,
+                 f"throughput={rows[-1]['queue_throughput_per_s']}/s "
+                 f"overlap_eff={eff:.3f} model_eff={model_eff:.3f}")
+    return {
+        "machine": {
+            "platform": jax.default_backend(),
+            "device_count": len(jax.devices()),
+            "mesh": [1, 1],
+        },
+        "rows": rows,
+    }
+
+
+def _ratios(doc: dict) -> dict:
+    """The portable per-row quantity the delta gate compares: the overlap
+    efficiency (interleaved/solo-sum — already machine-normalized)."""
+    return {(r["queue"], r["backend"]): r["overlap_efficiency"]
+            for r in doc["rows"]}
+
+
+def gate(baseline: dict, current: dict,
+         threshold: float = GATE_THRESHOLD) -> list:
+    """Regression messages: any queue row whose overlap efficiency grew by
+    more than ``threshold`` vs the committed baseline AND rose past
+    parity (>= 1.0) — i.e. interleaving stopped beating solo-sum
+    (mesh mismatch: rows aren't comparable, skip).  Sub-parity drift stays
+    un-gated: on a loaded shared runner the absolute efficiency of a
+    winning interleave wobbles, but a true executor regression shows up as
+    the overlap win disappearing altogether."""
+    if baseline.get("machine", {}).get("mesh") != \
+            current.get("machine", {}).get("mesh"):
+        return []
+    base_r, cur_r = _ratios(baseline), _ratios(current)
+    msgs = []
+    for key in sorted(set(base_r) & set(cur_r)):
+        queue, backend = key
+        if cur_r[key] > (1.0 + threshold) * base_r[key] \
+                and cur_r[key] >= 1.0:
+            msgs.append(
+                f"REGRESSION {backend}@{queue}: overlap efficiency "
+                f"{cur_r[key]:.3f} vs baseline {base_r[key]:.3f} "
+                f"(>{threshold:.0%} worse and past parity)")
+    return msgs
+
+
+def main(argv=None) -> int:
     import argparse
     import sys
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="few iterations; fails if the reused-plan or "
-                         "sharded-in path regresses the replan path")
-    args = ap.parse_args()
+                         "sharded-in path regresses the replan path, or if "
+                         "no executor queue shows overlap efficiency < 0.95")
+    ap.add_argument("--emit-json", metavar="PATH",
+                    help="write the executor queue rows as JSON")
+    ap.add_argument("--gate", metavar="BASELINE",
+                    help="compare against a committed BENCH_exec.json; "
+                         "exit 1 on >20%% regression")
+    args = ap.parse_args(argv)
     print("name,us_per_call,derived")
-    t = run(iters=3 if args.smoke else ITERS)
-    # The acceptance criterion, enforced: a reused plan (and its sharded-in
-    # variant) must beat replanning every call.  The ~8x margin makes this
-    # robust to CI timing noise.
-    if t["plan"] > t["replan"] or t["sharded"] > t["replan"]:
-        print("plan_reuse: reused-plan path regressed the replan path",
-              file=sys.stderr)
-        sys.exit(1)
+    rc = 0
+    if not (args.emit_json or args.gate):
+        t = run(iters=3 if args.smoke else ITERS)
+        # The acceptance criterion, enforced: a reused plan (and its
+        # sharded-in variant) must beat replanning every call.  The ~8x
+        # margin makes this robust to CI timing noise.
+        if t["plan"] > t["replan"] or t["sharded"] > t["replan"]:
+            print("plan_reuse: reused-plan path regressed the replan path",
+                  file=sys.stderr)
+            rc = 1
+    doc = queue_rows(iters=9 if args.smoke else QUEUE_ITERS)
+    if args.smoke:
+        # Executor acceptance: interleaving must beat solo-sum by >= 5% on
+        # at least one (queue, backend) row.  The small overhead-dominated
+        # queue sits near 0.65 on a 1-core host, so the margin is wide.
+        best = min(r["overlap_efficiency"] for r in doc["rows"])
+        if best >= 0.95:
+            print(f"plan_reuse: no queue overlapped (best efficiency "
+                  f"{best:.3f} >= 0.95)", file=sys.stderr)
+            rc = 1
+    if args.emit_json:
+        with open(args.emit_json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.emit_json} ({len(doc['rows'])} rows)")
+    if args.gate:
+        with open(args.gate) as f:
+            baseline = json.load(f)
+        msgs = gate(baseline, doc)
+        for m in msgs:
+            print(m)
+        if msgs:
+            return 1
+        print(f"gate ok vs {args.gate}")
+    return rc
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    sys.exit(main())

@@ -12,13 +12,17 @@ from .decomp import (Decomposition, RedistHop, Redistribution, StageLayout,
 from .perfmodel import (Machine, MachineProfile, calibrate, hop_cost_terms,
                         predict_plan_time, profile_from_machine,
                         stage_comp_times)
-from .pipeline import (PipelineSpec, build_pipeline, compile_pipeline,
-                       effective_grid, input_struct, make_spec,
-                       output_struct)
+from .executor import PlanStreamExecutor, SegmentTask, execute_many
+from .pipeline import (PipelineSpec, build_pipeline, build_segment,
+                       compile_pipeline, compile_segment, effective_grid,
+                       input_struct, make_spec, n_segments, output_struct,
+                       segment_structs)
 from .plan import (GLOBAL_PLAN_CACHE, PlanCache, TunedPlan, TuningCache,
                    global_tuning_cache, plan_key, tuning_key)
 from .redistribute import free_chunk_dim, redistribute, transpose_cost_bytes
-from .scheduler import choose_chunk_schedule, hop_phase_time
+from .scheduler import (CostModel, ScheduleSimulator, TaskSpec,
+                        WorkStealingPool, choose_chunk_schedule,
+                        hop_phase_time, place_tasks)
 from .tuner import (Candidate, enumerate_candidates,
                     feasible_hop_chunk_counts, measure_candidate,
                     propose_chunk_schedule, rank_candidates,
@@ -35,6 +39,10 @@ __all__ = [
     "validate_grid",
     "PipelineSpec", "build_pipeline", "compile_pipeline", "effective_grid",
     "input_struct", "make_spec", "output_struct",
+    "build_segment", "compile_segment", "n_segments", "segment_structs",
+    "PlanStreamExecutor", "SegmentTask", "execute_many",
+    "CostModel", "ScheduleSimulator", "TaskSpec", "WorkStealingPool",
+    "place_tasks",
     "GLOBAL_PLAN_CACHE", "PlanCache", "plan_key",
     "TunedPlan", "TuningCache", "global_tuning_cache", "tuning_key",
     "Machine", "MachineProfile", "calibrate", "hop_cost_terms",

@@ -69,7 +69,8 @@ from jax.sharding import Mesh, NamedSharding
 from . import transforms
 from .decomp import describe_decomp, make_decomposition, validate_grid
 from .pipeline import (PipelineSpec, build_pipeline, compile_pipeline,
-                       input_struct, make_spec, output_struct)
+                       compile_segment, input_struct, make_spec,
+                       output_struct, segment_structs)
 from .plan import TunedPlan, TuningCache, env_capacity
 
 _DEF_KINDS = ("fft", "fft", "fft")
@@ -162,7 +163,7 @@ class DistributedFFT:
                  inv_spec: PipelineSpec, *,
                  batch_shape: Tuple[int, ...] = (), dtype=jnp.complex64,
                  tuned: Optional[TunedPlan] = None, tuning: str = "off",
-                 precompiled: bool = True):
+                 precompiled: bool = True, shared: bool = False):
         self.mesh = mesh
         self._fwd_spec = fwd_spec
         self._inv_spec = inv_spec
@@ -170,6 +171,9 @@ class DistributedFFT:
         self.tuned = tuned
         self.tuning = tuning
         self.precompiled = precompiled
+        # Shared plans (wrapper-memoized: many callers hold the same object)
+        # refuse input donation — the caller still owns the buffer.
+        self.shared = shared
         self._in_struct = input_struct(mesh, fwd_spec, self.batch_shape,
                                        dtype)
         self._out_struct = output_struct(mesh, fwd_spec, self.batch_shape,
@@ -181,6 +185,8 @@ class DistributedFFT:
                                              self._out_struct.dtype)
         self._exe: Dict[Tuple[bool, bool], Any] = {}
         self._jit: Dict[Tuple[bool, bool], Callable] = {}
+        self._segs: Dict[Tuple[bool, bool, bool], list] = {}
+        self._seg_structs: Dict[bool, list] = {}
         self._build_lock = threading.Lock()
         if precompiled:
             # Planning pays the forward compile; the inverse compiles on
@@ -308,7 +314,8 @@ class DistributedFFT:
             f"  out: {self._out_struct.shape} {self._out_struct.dtype} "
             f"{self._fwd_spec.out_spec()}",
             f"  compiled: [{', '.join(compiled) or 'none'}] "
-            f"(precompiled={self.precompiled})",
+            f"(precompiled={self.precompiled}"
+            + (", shared" if self.shared else "") + ")",
         ]
         return "\n".join(lines)
 
@@ -348,8 +355,97 @@ class DistributedFFT:
                     self._jit[key] = fn
         return fn
 
+    # -- stage segments (the plan-stream executor's unit of work) -----------
+
+    def pipeline_spec(self, *, inverse: bool = False) -> PipelineSpec:
+        """The lowered :class:`PipelineSpec` of one direction."""
+        return self._inv_spec if inverse else self._fwd_spec
+
+    def _direction_dtype(self, inverse: bool):
+        return (self._inv_in_struct if inverse else self._in_struct).dtype
+
+    def segment_boundary_structs(self, *, inverse: bool = False) -> list:
+        """Shape/dtype/sharding at every stage-segment boundary
+        (``n_segments + 1`` entries; cached per direction)."""
+        structs = self._seg_structs.get(inverse)
+        if structs is None:
+            with self._build_lock:
+                structs = self._seg_structs.get(inverse)
+                if structs is None:
+                    spec = self.pipeline_spec(inverse=inverse)
+                    structs = segment_structs(self.mesh, spec,
+                                              self.batch_shape,
+                                              self._direction_dtype(inverse))
+                    self._seg_structs[inverse] = structs
+        return structs
+
+    def segments(self, *, inverse: bool = False, donate_input: bool = False,
+                 donate_intermediates: bool = True) -> list:
+        """Per-segment compiled executables (LRU plan-cache backed).
+
+        Chaining them over an input is bitwise identical to the fused
+        ``__call__`` path.  Interior segments compile with input donation
+        by default (their inputs are the caller's own intermediates — the
+        executor's double-buffered hop workspaces); ``donate_input=True``
+        additionally donates segment 0's operand buffer — refused for
+        shared plans, whose callers still own their buffers.
+        """
+        if donate_input and self.shared:
+            raise ValueError(
+                "refusing donate_input=True for a shared (wrapper-memoized) "
+                "plan: other callers may still own the input buffer")
+        key = (inverse, donate_input, donate_intermediates)
+        segs = self._segs.get(key)
+        if segs is None:
+            structs = self.segment_boundary_structs(inverse=inverse)
+            with self._build_lock:
+                segs = self._segs.get(key)
+                if segs is None:
+                    spec = self.pipeline_spec(inverse=inverse)
+                    dtype = self._direction_dtype(inverse)
+                    segs = [
+                        compile_segment(
+                            self.mesh, spec, j, self.batch_shape, dtype,
+                            donate=(donate_input if j == 0
+                                    else donate_intermediates),
+                            in_struct=structs[j])
+                        for j in range(len(structs) - 1)]
+                    self._segs[key] = segs
+        return segs
+
+    def submit(self, x: jax.Array, *, executor, inverse: bool = False,
+               sharded_in: bool = False, donate: bool = False,
+               tag: Optional[str] = None) -> int:
+        """Enqueue this plan on a ``PlanStreamExecutor``; returns the queue
+        index (outputs come from ``executor.run()`` in submit order)."""
+        return executor.submit(self, x, inverse=inverse,
+                               sharded_in=sharded_in, donate=donate, tag=tag)
+
+    def execute_many(self, xs: Sequence[jax.Array], *, inverse: bool = False,
+                     sharded_in: bool = False, donate: bool = False,
+                     executor=None, **executor_kw) -> list:
+        """Run many operands through this plan as one interleaved segment
+        stream (see ``core.executor``); returns outputs in operand order,
+        bitwise identical to calling the plan on each solo.  Pass an
+        existing ``executor`` to mix with other plans' entries, else one is
+        built from ``executor_kw``."""
+        from .executor import PlanStreamExecutor  # deferred: avoid cycle
+        ex = executor if executor is not None \
+            else PlanStreamExecutor(**executor_kw)
+        for x in xs:
+            ex.submit(self, x, inverse=inverse, sharded_in=sharded_in,
+                      donate=donate)
+        return ex.run()
+
+    # -- fused execution ----------------------------------------------------
+
     def _execute(self, x: jax.Array, *, inverse: bool, sharded_in: bool,
                  donate: bool) -> jax.Array:
+        if donate and self.shared:
+            raise ValueError(
+                "refusing donate=True on a shared (wrapper-memoized) plan: "
+                "other callers may still own the input buffer; build a "
+                "private plan via plan_fft for donation")
         struct = self._inv_in_struct if inverse else self._in_struct
         if tuple(x.shape) != tuple(struct.shape):
             raise ValueError(
@@ -572,11 +668,19 @@ def _wrapper_plan(mesh: Mesh, grid, kinds, batch_shape, dtype, decomp,
            str(jnp.dtype(dtype)), decomp, backend, n_chunks,
            tuple(mesh_axes) if mesh_axes is not None else None, tuning,
            tune_cache, precompiled)
-    return _memoized(key, lambda: plan_fft(
-        mesh, grid, kinds=kinds, batch_shape=batch_shape, dtype=dtype,
-        decomp=decomp, backend=backend, n_chunks=n_chunks,
-        mesh_axes=mesh_axes, tuning=tuning, tune_cache=tune_cache,
-        precompiled=precompiled))
+
+    def build() -> DistributedFFT:
+        plan = plan_fft(
+            mesh, grid, kinds=kinds, batch_shape=batch_shape, dtype=dtype,
+            decomp=decomp, backend=backend, n_chunks=n_chunks,
+            mesh_axes=mesh_axes, tuning=tuning, tune_cache=tune_cache,
+            precompiled=precompiled)
+        # Memoized plans are shared across every wrapper caller: they must
+        # never donate a caller's input buffer (donate=True raises).
+        plan.shared = True
+        return plan
+
+    return _memoized(key, build)
 
 
 def fftnd(x: jax.Array, *, mesh: Mesh, ndim: Optional[int] = None,
@@ -797,9 +901,16 @@ def poisson_solve(rhs: jax.Array, *, mesh: Mesh,
            batch_shape, str(jnp.dtype(dtype)), decomp, backend, n_chunks,
            tuple(mesh_axes) if mesh_axes is not None else None, tuning,
            tune_cache, precompiled)
-    solver = _memoized(key, lambda: PoissonSolver(
-        mesh, grid, topology=topology, lengths=lengths,
-        batch_shape=batch_shape, dtype=dtype, decomp=decomp,
-        backend=backend, n_chunks=n_chunks, mesh_axes=mesh_axes,
-        tuning=tuning, tune_cache=tune_cache, precompiled=precompiled))
+    def build() -> PoissonSolver:
+        solver = PoissonSolver(
+            mesh, grid, topology=topology, lengths=lengths,
+            batch_shape=batch_shape, dtype=dtype, decomp=decomp,
+            backend=backend, n_chunks=n_chunks, mesh_axes=mesh_axes,
+            tuning=tuning, tune_cache=tune_cache, precompiled=precompiled)
+        # The memoized solver (and its plan) is shared across callers:
+        # refuse input donation just like the fftnd wrapper plans.
+        solver.plan.shared = True
+        return solver
+
+    solver = _memoized(key, build)
     return solver.solve(rhs)

@@ -1,0 +1,471 @@
+"""Plan-stream executor: interleave stage segments of heterogeneous plans.
+
+The paper's tentpole claim is that FFTs expressed as dynamically scheduled
+tasks beat static bulk-synchronous pipelines.  ``DistributedFFT.__call__``
+is the static baseline: one fused executable per call, every call blocking
+before the next starts, so nothing ever overlaps one plan's ``all_to_all``
+with another plan's compute.  :class:`PlanStreamExecutor` is the dynamic
+counterpart — a queue of heterogeneous plan executions (e.g. many small
+batched 2-D plans plus one large 3-D plan) executed as interleaved **stage
+segments**.
+
+Segment model
+-------------
+``pipeline.compile_segment`` lowers each plan into ``n_stages`` separately
+compiled segments: segment 0 is the stage-0 local transform, segment ``j``
+is hop ``j-1``'s redistribution (at its own ``chunk_schedule`` entry) fused
+with stage ``j``'s transform.  Chained segments are **bitwise identical**
+to the fused monolithic pipeline (enforced by tests), so submitting work
+here never changes results — only when compute and communication happen.
+
+Every submitted entry's segments become :class:`~.scheduler.TaskSpec`s
+priced by the calibratable perf model — stage compute from
+``perfmodel.stage_comp_times``, hop phases from ``hop_cost_terms`` fed
+through ``scheduler.hop_phase_time`` at the hop's chunk count, entry
+aggregates from ``perfmodel.predict_plan_time`` — and each segment is
+classified *communication-dominant* (the hop's alpha/beta terms exceed the
+downstream FFT time) or *compute-dominant*.
+
+Interleaving policy
+-------------------
+1. **Placement** — entries are assigned to ``n_streams`` dispatch lanes by
+   ``scheduler.place_tasks`` (Alg. 3 affinity placement plus the
+   variance-triggered rebalance), so heterogeneous entry costs spread
+   across lanes.
+2. **Ordering** — a deterministic greedy merge builds the global dispatch
+   order: among the streams' next-up segments, prefer one whose phase type
+   differs from the previously dispatched segment's (a communication
+   segment is dispatched under another entry's compute segment and vice
+   versa), tie-broken toward the lane with the least dispatched cost.
+   Per-entry segment order is always preserved.
+3. **Validation** — ``scheduler.ScheduleSimulator`` replays the chosen
+   placement deterministically (``report()``: predicted interleaved wall
+   vs the serial sum).  A timed run (``watchdog=`` or ``profile=True``)
+   records *measured* per-segment durations and re-simulates with them, so
+   the report shows predicted-vs-measured overlap for the interleaving the
+   executor actually chose.
+
+Dispatch runs on JAX's async runtime: segments are dispatched without
+blocking (mode="async", the default, one lane order merged as above) or by
+a :class:`~.scheduler.WorkStealingPool` worker thread per lane stealing
+whole entries when idle (mode="pool"); either way one entry's collective
+runs under another entry's local FFTs on the device runtime.  A timed run
+(straggler attribution via ``distributed.fault.StepWatchdog``) blocks per
+segment instead — trading away overlap for per-hop visibility.
+
+Invariants
+----------
+* Outputs are bitwise identical to solo ``plan(x)`` execution and
+  independent of placement, ordering, and dispatch mode.
+* **Double-buffered hop workspaces**: interior segments compile with input
+  donation, so at any moment an entry holds at most two live boundary
+  buffers (the segment's input being consumed and its output) — hop
+  workspaces flip-flop instead of accumulating per stage.
+* **Donation safety**: a caller's input buffer is donated only when that
+  entry was submitted with ``donate=True`` — never implicitly, and never
+  for plans marked ``shared`` (wrapper-memoized plans refuse donation).
+  Interior boundary buffers are executor-owned, so donating them is always
+  safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from .perfmodel import (as_profile, hop_cost_terms, predict_plan_time,
+                        stage_comp_times)
+from .scheduler import (CostModel, ScheduleSimulator, TaskSpec,
+                        WorkStealingPool, hop_phase_time, place_tasks)
+
+DISPATCH_MODES = ("async", "pool", "timed")
+
+
+@dataclasses.dataclass
+class SegmentTask:
+    """One dispatchable stage segment of one queue entry."""
+    entry: int                    # queue index of the owning entry
+    index: int                    # segment index within the entry
+    kind: str                     # "comp" | "comm" (dominant phase)
+    cost_s: float                 # predicted wall seconds (perf model)
+    bytes_out: int                # boundary buffer size this segment emits
+    tag: str
+    stream: int = 0               # dispatch lane (filled by placement)
+    measured_s: float = 0.0       # filled by timed runs
+
+    def task_spec(self) -> TaskSpec:
+        return TaskSpec(home=self.stream, cost=self.cost_s,
+                        data_bytes=self.bytes_out, tag=self.tag)
+
+
+@dataclasses.dataclass
+class _Entry:
+    plan: Any
+    x: jax.Array
+    inverse: bool
+    sharded_in: bool
+    donate: bool
+    tag: str
+    segments: List[SegmentTask] = dataclasses.field(default_factory=list)
+    total_cost_s: float = 0.0
+    stream: int = 0
+    out: Optional[jax.Array] = None
+
+
+def _entry_segments(idx: int, entry: _Entry, machine,
+                    cost_model: CostModel) -> List[SegmentTask]:
+    """Price one entry's segments as scheduler tasks (perf-model terms)."""
+    plan = entry.plan
+    spec = plan.pipeline_spec(inverse=entry.inverse)
+    mesh = plan.mesh
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    structs = plan.segment_boundary_structs(inverse=entry.inverse)
+    dtype_bytes = jax.numpy.dtype(structs[-1].dtype).itemsize
+    batch = max(1, math.prod(plan.batch_shape))
+    prof = as_profile(machine)
+
+    stage_t = stage_comp_times(spec.grid, spec.decomp, axis_sizes, prof,
+                               backend=spec.backend, dtype_bytes=dtype_bytes,
+                               kinds=spec.kinds, eff_grid=spec.eff_grid)
+    hops = hop_cost_terms(spec.grid, spec.decomp, axis_sizes, prof,
+                          backend=spec.backend, dtype_bytes=dtype_bytes,
+                          kinds=spec.kinds, eff_grid=spec.eff_grid,
+                          stage_times=stage_t)
+    if spec.inverse:
+        # perfmodel prices in forward stage/hop order; the inverse pipeline
+        # executes stages and hops LIFO (executed hop k == forward hop
+        # n_hops-1-k, its downstream stage the matching forward stage).
+        stage_t = stage_t[::-1]
+        hops = hops[::-1]
+    tau_s = cost_model.steal_cost(TaskSpec(data_bytes=0))
+
+    segs = [SegmentTask(
+        entry=idx, index=0, kind="comp", cost_s=batch * stage_t[0],
+        bytes_out=_struct_bytes(structs[1]), tag=f"{entry.tag}/seg0")]
+    for j in range(1, len(stage_t)):
+        _, beta, alpha, _ = hops[j - 1]
+        k = spec.chunk_schedule[j - 1]
+        t_comm = beta + alpha * max(k, 1)
+        phase = hop_phase_time(stage_t[j], beta, alpha, k, tau_s=tau_s,
+                               overlap_floor=prof.overlap)
+        segs.append(SegmentTask(
+            entry=idx, index=j,
+            kind="comm" if t_comm >= stage_t[j] else "comp",
+            cost_s=batch * phase, bytes_out=_struct_bytes(structs[j + 1]),
+            tag=f"{entry.tag}/seg{j}"))
+    return segs
+
+
+def _struct_bytes(struct: jax.ShapeDtypeStruct) -> int:
+    return math.prod(struct.shape) * jax.numpy.dtype(struct.dtype).itemsize
+
+
+class PlanStreamExecutor:
+    """Queue heterogeneous plan executions; run them as interleaved segments.
+
+    Parameters
+    ----------
+    n_streams:
+        Dispatch lanes (``place_tasks`` workers).  Default 2 — one lane's
+        communication overlaps the other's compute.
+    machine:
+        ``Machine``/``MachineProfile`` for segment pricing (default: the
+        perf model's platform default; pass a calibrated profile for
+        measured terms).
+    cost_model:
+        LogP :class:`~.scheduler.CostModel` for placement and ``tau_s``.
+    watchdog:
+        Optional ``distributed.fault.StepWatchdog``.  When set, runs are
+        **timed**: each segment blocks and is fed to the watchdog, so
+        straggler hops land in ``stragglers``.
+    mode:
+        "async" (default) — one thread dispatches the merged order without
+        blocking; "pool" — a ``WorkStealingPool`` thread per lane dispatches
+        entry chains, stealing whole entries; "timed" — block per segment
+        (implied by ``watchdog``/``profile``).
+    donate_intermediates:
+        Compile interior segments with input donation (the double-buffer
+        contract).  Default True.
+    profile:
+        Record measured per-segment durations even without a watchdog
+        (forces timed dispatch).
+    """
+
+    def __init__(self, *, n_streams: int = 2, machine=None,
+                 cost_model: Optional[CostModel] = None, watchdog=None,
+                 mode: str = "async", donate_intermediates: bool = True,
+                 profile: bool = False):
+        if mode not in DISPATCH_MODES:
+            raise ValueError(f"mode must be one of {DISPATCH_MODES}, "
+                             f"got {mode!r}")
+        self.n_streams = max(int(n_streams), 1)
+        self.machine = machine
+        self.cost_model = cost_model if cost_model is not None else CostModel()
+        self.watchdog = watchdog
+        self.mode = mode
+        self.donate_intermediates = bool(donate_intermediates)
+        self.profile = bool(profile)
+        self._queue: List[_Entry] = []
+        # Collective-safety: segment executables contain all_to_all
+        # collectives spanning every mesh device.  Launching two such
+        # executables from racing threads can enqueue them in a different
+        # order on different devices, and the cross-executable rendezvous
+        # deadlocks (each device blocks in the other's collective).  All
+        # dispatch therefore goes through one lock — launches are ordered,
+        # while execution still overlaps on the async runtime beneath.
+        self._dispatch_lock = threading.Lock()
+        self._step = 0                      # watchdog step counter
+        self._step_tags: Dict[int, str] = {}
+        self._last_schedule: List[SegmentTask] = []
+        self._last_report: Dict[str, Any] = {}
+
+    # -- queue management ---------------------------------------------------
+
+    def submit(self, plan, x: jax.Array, *, inverse: bool = False,
+               sharded_in: bool = False, donate: bool = False,
+               tag: Optional[str] = None) -> int:
+        """Enqueue one plan execution; returns its queue index.
+
+        ``donate=True`` donates the *caller's* input buffer to segment 0
+        (refused for ``shared`` wrapper-memoized plans — the caller may not
+        own that buffer exclusively).  Nothing executes until :meth:`run`.
+        """
+        if donate and getattr(plan, "shared", False):
+            raise ValueError(
+                "refusing donate=True for a shared (wrapper-memoized) plan: "
+                "other callers may still own the input buffer; build a "
+                "private plan via plan_fft for donation")
+        struct = plan.in_struct if not inverse else plan.inv_in_struct
+        if tuple(x.shape) != tuple(struct.shape):
+            raise ValueError(
+                f"entry {len(self._queue)}: operand shape {tuple(x.shape)} "
+                f"!= plan {'inverse' if inverse else 'forward'} input "
+                f"{tuple(struct.shape)}")
+        idx = len(self._queue)
+        self._queue.append(_Entry(
+            plan=plan, x=x, inverse=inverse, sharded_in=sharded_in,
+            donate=donate, tag=tag if tag is not None else f"entry{idx}"))
+        return idx
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    # -- scheduling ---------------------------------------------------------
+
+    def _plan_schedule(self) -> List[SegmentTask]:
+        """Price, place and order the queue; returns the dispatch order."""
+        entries = self._queue
+        for i, e in enumerate(entries):
+            e.segments = _entry_segments(i, e, self._machine(), self.cost_model)
+            e.total_cost_s = sum(s.cost_s for s in e.segments)
+
+        # Alg. 3 placement over entry aggregates: heterogeneous entries
+        # spread across lanes by predicted cost, with the rebalance pass
+        # fixing a lane stuck with one big 3-D plan plus small 2-D ones.
+        entry_tasks = [TaskSpec(home=i % self.n_streams, cost=e.total_cost_s,
+                                data_bytes=_struct_bytes(
+                                    e.plan.in_struct if not e.inverse
+                                    else e.plan.inv_in_struct),
+                                tag=e.tag)
+                       for i, e in enumerate(entries)]
+        sigma = place_tasks(entry_tasks, self.n_streams, self.cost_model)
+        for i, e in enumerate(entries):
+            e.stream = sigma[i]
+            for s in e.segments:
+                s.stream = sigma[i]
+
+        # Greedy comm/comp-alternating merge of the per-lane queues.
+        lanes: List[List[SegmentTask]] = [[] for _ in range(self.n_streams)]
+        for e in entries:
+            lanes[e.stream].extend(e.segments)
+        heads = [0] * self.n_streams
+        dispatched = [0.0] * self.n_streams
+        order: List[SegmentTask] = []
+        last_kind = "comm"  # start with compute: fills the device first
+        while any(h < len(lane) for h, lane in zip(heads, lanes)):
+            ready = [(w, lanes[w][heads[w]]) for w in range(self.n_streams)
+                     if heads[w] < len(lanes[w])]
+            # Prefer a phase-type flip; among those, the least-fed lane.
+            w, seg = min(
+                ready, key=lambda ws: (ws[1].kind == last_kind,
+                                       dispatched[ws[0]], ws[0]))
+            heads[w] += 1
+            dispatched[w] += seg.cost_s
+            last_kind = seg.kind
+            order.append(seg)
+        return order
+
+    def _machine(self):
+        if self.machine is not None:
+            return self.machine
+        from .tuner import default_machine  # deferred: jax-backend probe
+        return default_machine()
+
+    def _simulate(self, order: Sequence[SegmentTask],
+                  use_measured: bool = False) -> Dict[str, float]:
+        """Deterministic replay of the chosen placement (steal disabled:
+        segment order within a lane is a dependency chain)."""
+        tasks = []
+        for s in order:
+            cost = s.measured_s if use_measured and s.measured_s > 0 \
+                else s.cost_s
+            tasks.append(TaskSpec(home=s.stream, cost=cost,
+                                  data_bytes=s.bytes_out, tag=s.tag))
+        sim = ScheduleSimulator(self.n_streams, steal=False,
+                                cost_model=self.cost_model)
+        stats = sim.run(tasks, trace=True)
+        serial = sum(t.cost for t in tasks)
+        stats["serial_s"] = serial
+        stats["overlap_efficiency"] = (stats["wall_s"] / serial
+                                       if serial > 0 else 1.0)
+        return stats
+
+    # -- execution ----------------------------------------------------------
+
+    def _segment_exes(self, entry: _Entry) -> List[Any]:
+        return entry.plan.segments(
+            inverse=entry.inverse, donate_input=entry.donate,
+            donate_intermediates=self.donate_intermediates)
+
+    def _prepare_input(self, entry: _Entry) -> jax.Array:
+        plan = entry.plan
+        struct = plan.inv_in_struct if entry.inverse else plan.in_struct
+        x = entry.x
+        if x.dtype != struct.dtype:
+            x = x.astype(struct.dtype)
+        if not entry.sharded_in:
+            x = jax.device_put(x, struct.sharding)
+        return x
+
+    def _dispatch_entry_segment(self, entry: _Entry, seg: SegmentTask,
+                                exes: List[Any], bufs: Dict[int, jax.Array]
+                                ) -> None:
+        with self._dispatch_lock:       # consistent collective launch order
+            cur = (bufs[seg.entry] if seg.index > 0
+                   else self._prepare_input(entry))
+            out = exes[seg.index](cur)
+            bufs[seg.entry] = out
+            if seg.index == len(entry.segments) - 1:
+                entry.out = out
+
+    def run(self) -> List[jax.Array]:
+        """Execute every queued entry; returns outputs in submit order.
+
+        Outputs are dispatched asynchronously (except in timed mode) — they
+        are valid JAX arrays whose values materialize on first use; call
+        ``jax.block_until_ready`` to wait for the whole queue.  The queue
+        is cleared; ``report()`` describes the run.
+        """
+        if not self._queue:
+            return []
+        order = self._plan_schedule()
+        self._last_schedule = order
+        self._last_report = {"predicted": self._simulate(order)}
+
+        entries = self._queue
+        exes = [self._segment_exes(e) for e in entries]
+        timed = (self.mode == "timed" or self.watchdog is not None
+                 or self.profile)
+        bufs: Dict[int, jax.Array] = {}
+        if timed:
+            for seg in order:
+                step = self._step
+                self._step += 1
+                self._step_tags[step] = seg.tag
+                if self.watchdog is not None:
+                    self.watchdog.start(step)
+                t0 = time.perf_counter()
+                self._dispatch_entry_segment(entries[seg.entry], seg,
+                                             exes[seg.entry], bufs)
+                jax.block_until_ready(bufs[seg.entry])
+                seg.measured_s = time.perf_counter() - t0
+                if self.watchdog is not None:
+                    self.watchdog.stop()
+            self._last_report["measured"] = self._simulate(
+                order, use_measured=True)
+            self._last_report["segment_times"] = {
+                s.tag: s.measured_s for s in order}
+        elif self.mode == "pool":
+            # One worker thread per lane dispatches its entries' segment
+            # chains in lane order; an idle lane steals a whole entry (safe:
+            # dependencies never cross entries).  Each launch holds the
+            # dispatch lock (collective launch-order consistency); overlap
+            # comes from the async runtime underneath.
+            pool = WorkStealingPool(self.n_streams,
+                                    cost_model=self.cost_model)
+
+            def chain(e_idx: int):
+                entry = entries[e_idx]
+                for seg in entry.segments:
+                    self._dispatch_entry_segment(entry, seg, exes[e_idx],
+                                                 bufs)
+
+            seen = set()
+            for seg in order:         # lane-merged order, entry granularity
+                if seg.entry in seen:
+                    continue
+                seen.add(seg.entry)
+                e = entries[seg.entry]
+                pool.submit(TaskSpec(fn=chain, args=(seg.entry,),
+                                     home=e.stream, cost=e.total_cost_s,
+                                     data_bytes=0, tag=e.tag))
+            self._last_report["pool"] = pool.run()
+        else:
+            for seg in order:
+                self._dispatch_entry_segment(entries[seg.entry], seg,
+                                             exes[seg.entry], bufs)
+
+        outs = [e.out for e in entries]
+        self._queue = []
+        return outs
+
+    # -- introspection ------------------------------------------------------
+
+    def report(self) -> Dict[str, Any]:
+        """Last run's schedule validation: ``predicted`` (simulator over
+        perf-model costs), plus ``measured``/``segment_times`` after a
+        timed run and ``pool`` stats after a pooled one."""
+        return dict(self._last_report)
+
+    @property
+    def last_schedule(self) -> List[SegmentTask]:
+        """The dispatch order the last run chose (SegmentTask records)."""
+        return list(self._last_schedule)
+
+    @property
+    def stragglers(self) -> List[Tuple[str, float]]:
+        """Watchdog-flagged segments of all runs: ``(tag, seconds)``."""
+        if self.watchdog is None:
+            return []
+        return [(self._step_tags.get(step, f"step{step}"), dt)
+                for step, dt in self.watchdog.flagged]
+
+    def predict_entry_time(self, plan, *, inverse: bool = False) -> float:
+        """Perf-model wall-seconds for one solo entry (pricing helper)."""
+        spec = plan.pipeline_spec(inverse=inverse)
+        axis_sizes = dict(zip(plan.mesh.axis_names, plan.mesh.devices.shape))
+        pred = predict_plan_time(
+            spec.grid, spec.decomp, axis_sizes, as_profile(self._machine()),
+            backend=spec.backend, kinds=spec.kinds, eff_grid=spec.eff_grid,
+            chunk_schedule=spec.chunk_schedule)
+        batch = max(1, math.prod(plan.batch_shape))
+        return batch * pred["t_total_s"]
+
+
+def execute_many(entries: Sequence, **executor_kw) -> List[jax.Array]:
+    """Run a heterogeneous queue in one interleaved stream.
+
+    ``entries`` are ``(plan, x)`` pairs or ``(plan, x, opts)`` triples
+    (``opts`` forwarded to :meth:`PlanStreamExecutor.submit`:  ``inverse``,
+    ``sharded_in``, ``donate``, ``tag``).  Returns outputs in entry order,
+    bitwise identical to calling each plan solo.
+    """
+    ex = PlanStreamExecutor(**executor_kw)
+    for item in entries:
+        plan, x, opts = (*item, {}) if len(item) == 2 else item
+        ex.submit(plan, x, **opts)
+    return ex.run()

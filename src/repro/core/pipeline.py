@@ -19,6 +19,17 @@ entries per hop and records the ask.
 R2C transforms pad the frequency dim up to the LCM of the mesh-axis sizes
 that shard it downstream, so every stage keeps integral local shapes; the
 inverse pipeline trims the pad before the final irfft.
+
+Besides the fused monolithic pipeline, the same stages lower as separately
+compiled **stage segments** (``build_segment``/``compile_segment``):
+segment 0 is the stage-0 local transform, segment ``j >= 1`` is hop
+``j-1``'s redistribution (at its own ``chunk_schedule`` entry) fused with
+stage ``j``'s transform — exactly the ops the monolithic pipeline runs, in
+the same order, so chaining the segments is bitwise identical to one fused
+call.  Each segment carries a sharding-in/sharding-out contract
+(``segment_in_spec``/``segment_out_spec``); boundary shapes/dtypes come
+from abstract evaluation (``segment_structs``).  ``core.executor``
+interleaves segments of *different* plans on this contract.
 """
 from __future__ import annotations
 
@@ -475,6 +486,132 @@ def compile_pipeline(mesh: Mesh, spec: PipelineSpec,
         donate_argnums = (0,) if donate else ()
         return jax.jit(build_pipeline(mesh, spec),
                        donate_argnums=donate_argnums).lower(arg).compile()
+
+    if not use_cache:
+        return builder()
+    return GLOBAL_PLAN_CACHE.get_or_create(key, builder).executable
+
+
+# ---------------------------------------------------------------------------
+# Stage segments: the pipeline split at its redistribution hops.
+# ---------------------------------------------------------------------------
+#
+# Segment 0 applies the stage-0 local transform; segment j (1-based) applies
+# hop j-1's redistribution — at that hop's own chunk_schedule entry — with
+# stage j's transform fused per chunk, exactly like the monolithic
+# _local_pipeline's loop body.  The only intentional divergence is the
+# pallas pack-fusion epilogue: a stage's epilogue packs for the *next* hop,
+# which lives in the next segment's executable, so segments always build
+# their stage transform with next_hop=None (fused-vs-unfused is bitwise
+# identical, so chained segments still match the monolithic pipeline
+# bit for bit).
+
+
+def n_segments(spec: PipelineSpec) -> int:
+    """Number of stage segments (== number of stages)."""
+    return len(spec.decomp.stages)
+
+
+def segment_in_spec(spec: PipelineSpec, index: int) -> P:
+    """PartitionSpec of segment ``index``'s input (stage ``index-1`` layout;
+    segment 0 takes the pipeline input layout)."""
+    stages, _ = spec.stage_order()
+    return P(*(spec.batch_spec + stages[max(index - 1, 0)].spec))
+
+
+def segment_out_spec(spec: PipelineSpec, index: int) -> P:
+    """PartitionSpec of segment ``index``'s output (stage ``index`` layout)."""
+    stages, _ = spec.stage_order()
+    return P(*(spec.batch_spec + stages[index].spec))
+
+
+def _local_segment(spec: PipelineSpec, index: int, axis_sizes=None) -> Callable:
+    """The per-device function of one stage segment (to be shard_map'd)."""
+    stages, redists = spec.stage_order()
+    if not 0 <= index < len(stages):
+        raise ValueError(f"segment index {index} out of range for "
+                         f"{len(stages)} stages")
+    off = spec.spatial_offset
+    last = index == len(stages) - 1
+    stage_fn = _stage_transform(spec, stages[index], index == 0, last,
+                                next_hop=None, axis_sizes=axis_sizes)
+    if index == 0:
+        return stage_fn
+    hop = redists[index - 1]
+    avoid = tuple(d + off for d in stages[index].fft_dims)
+
+    def run(x: jax.Array) -> jax.Array:
+        return redistribute(x, hop, n_chunks=spec.chunk_schedule[index - 1],
+                            then=stage_fn, spatial_offset=off,
+                            avoid_dims=avoid, hop_index=index - 1)
+
+    return run
+
+
+def build_segment(mesh: Mesh, spec: PipelineSpec, index: int) -> Callable:
+    """shard_map one stage segment over the mesh.  jit-compatible."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return shard_map(_local_segment(spec, index, axis_sizes), mesh=mesh,
+                     in_specs=segment_in_spec(spec, index),
+                     out_specs=segment_out_spec(spec, index),
+                     check_vma=False)
+
+
+def segment_structs(mesh: Mesh, spec: PipelineSpec,
+                    batch_shape: Tuple[int, ...] = (),
+                    dtype=jnp.complex64) -> List[jax.ShapeDtypeStruct]:
+    """Shape/dtype/sharding at every segment boundary.
+
+    ``n_segments + 1`` entries: entry ``j`` is segment ``j``'s input and
+    entry ``j+1`` its output (entry 0 == ``input_struct``, the last entry
+    matches ``output_struct``).  Derived by abstract evaluation so R2C
+    padding, irfft trimming and per-kind dtype changes at interior
+    boundaries are the pipeline's own, not re-derived.
+    """
+    structs = [input_struct(mesh, spec, batch_shape, dtype)]
+    for j in range(n_segments(spec)):
+        out = jax.eval_shape(build_segment(mesh, spec, j), structs[-1])
+        structs.append(jax.ShapeDtypeStruct(
+            out.shape, out.dtype,
+            sharding=NamedSharding(mesh, segment_out_spec(spec, j))))
+    return structs
+
+
+def compile_segment(mesh: Mesh, spec: PipelineSpec, index: int,
+                    batch_shape: Tuple[int, ...] = (),
+                    dtype=jnp.complex64, *, use_cache: bool = True,
+                    donate: bool = False,
+                    in_struct: Optional[jax.ShapeDtypeStruct] = None):
+    """Lower+compile one stage segment; cached in the LRU plan cache.
+
+    ``dtype`` is the **plan input** dtype (segment boundary dtypes follow
+    from it deterministically, so it suffices for the key).  ``donate=True``
+    donates the segment's input buffer — the executor compiles interior
+    segments donating so consecutive segments reuse hop workspaces
+    (double-buffering), while segment 0 only donates when the caller
+    donated the entry operand.  Callers that already hold
+    :func:`segment_structs` pass the segment's input entry as
+    ``in_struct`` to skip the abstract-eval chain.
+    """
+    if in_struct is None:
+        in_struct = segment_structs(mesh, spec, batch_shape, dtype)[index]
+
+    key = plan_key(kind=spec.kinds, grid=spec.grid, dtype=str(jnp.dtype(dtype)),
+                   decomp=(spec.decomp.name,) + tuple(spec.decomp.mesh_axes)
+                   + (spec.decomp.dim_groups,),
+                   mesh_shape=tuple(mesh.devices.shape),
+                   mesh_axes=tuple(mesh.axis_names), backend=spec.backend,
+                   n_chunks=spec.chunk_schedule, inverse=spec.inverse,
+                   # The segment marker keeps per-segment executables from
+                   # ever colliding with the fused pipeline's entries.
+                   extra=(tuple(batch_shape), bool(donate),
+                          "segment", int(index)))
+
+    def builder():
+        donate_argnums = (0,) if donate else ()
+        return jax.jit(build_segment(mesh, spec, index),
+                       donate_argnums=donate_argnums).lower(
+                           in_struct).compile()
 
     if not use_cache:
         return builder()

@@ -10,6 +10,12 @@ The cache also keeps hit/miss counters: benchmarks reproduce the paper's
 claim that plan reuse removes per-call planning latency, and tests assert
 that a second identical call is a cache hit.
 
+Per-**segment** executables (``pipeline.compile_segment`` — the plan-stream
+executor's stage-at-a-time lowering) live in the same LRU cache: the
+``extra`` key component carries ``(batch_shape, donate, "segment", index)``,
+so a plan's fused executable and each of its segments are distinct entries
+evicted under one global bound.
+
 ``TuningCache`` is the second, *persistent* layer: compiled executables
 cannot survive the process, but the autotuner's **decisions** (which decomp
 / backend / n_chunks won for a given problem key) can, as JSON on disk — the

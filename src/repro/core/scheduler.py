@@ -286,12 +286,18 @@ class ScheduleSimulator:
         self.speeds = list(speeds) if speeds else [1.0] * n_workers
 
     def run(self, tasks: Sequence[TaskSpec],
-            sigma: Optional[Sequence[int]] = None) -> Dict[str, float]:
+            sigma: Optional[Sequence[int]] = None, *,
+            trace: bool = False) -> Dict[str, float]:
+        """Simulate the policy over ``tasks``.  With ``trace=True`` the
+        result carries an ``events`` list of ``(start_s, worker, tag,
+        stolen)`` in execution order — the executor's schedule-validation
+        report uses it to show where each segment lands in virtual time."""
         queues: List[collections.deque] = [collections.deque()
                                            for _ in range(self.n)]
         placement = sigma if sigma is not None else [t.home for t in tasks]
         for i, t in enumerate(tasks):
             queues[placement[i] % self.n].append(t)
+        events: List[Tuple[float, int, str, bool]] = []
 
         busy = [0.0] * self.n
         finish = [0.0] * self.n
@@ -330,6 +336,8 @@ class ScheduleSimulator:
             if stolen:
                 dur += self.cm.steal_cost(task)
                 steals += 1
+            if trace:
+                events.append((now, w, task.tag, stolen))
             busy[w] += dur
             finish[w] = now + dur
             done_tasks[w] += 1
@@ -338,7 +346,7 @@ class ScheduleSimulator:
 
         wall = max(finish)
         mean_busy = statistics.mean(busy)
-        return {
+        stats = {
             "wall_s": wall,
             "imbalance_pct": (100.0 * statistics.pstdev(busy)
                               / max(mean_busy, 1e-12)),
@@ -349,6 +357,9 @@ class ScheduleSimulator:
             "avg_tasks_per_worker": len(tasks) / self.n,
             "per_worker_busy_s": busy,
         }
+        if trace:
+            stats["events"] = events
+        return stats
 
 
 def phase_time(t_comp: float, t_comm: float, k: float, tau_s: float,

@@ -308,6 +308,34 @@ print("identical", int(np.array_equal(y0, y1)))
     assert out.split()[-1] == "1"
 
 
+def test_wrapper_memoized_plan_never_donates_input():
+    """Regression: plans reached through the memoized wrappers (``fftnd``)
+    are shared across callers and must never compile with implicit
+    donation — a wrapper call must leave the caller's input array live and
+    unchanged, and explicit donation into the shared plan must be refused."""
+    out = run_subprocess(COMMON + """
+from repro.core import fftnd
+xj = jnp.asarray(x)
+snap = np.asarray(xj)
+y = fftnd(xj, mesh=mesh, ndim=3)
+jax.block_until_ready(y)
+print("input_live", int(not xj.is_deleted()))
+print("input_intact", int(np.array_equal(np.asarray(xj), snap)))
+from repro.core.api import _wrapper_plan
+plan = _wrapper_plan(mesh, (8, 8, 16), ("fft",)*3, (), jnp.complex64,
+                     None, None, None, None, "off", None, True)
+print("memo_shared", int(plan.shared))
+try:
+    plan(xj, donate=True)
+    print("donate_refused", 0)
+except ValueError as e:
+    print("donate_refused", int("shared" in str(e)))
+""")
+    vals = dict(l.split() for l in out.strip().splitlines())
+    assert vals == {"input_live": "1", "input_intact": "1",
+                    "memo_shared": "1", "donate_refused": "1"}, out
+
+
 def test_precompiled_false_jit_path():
     out = run_subprocess(COMMON + """
 plan = plan_fft(mesh, (8, 8, 16), precompiled=False)
