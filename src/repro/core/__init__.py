@@ -3,8 +3,8 @@
 # autotuned plan selection, plus the host-side dynamic task scheduler (work
 # stealing) it rides on.
 from .api import (DistributedFFT, PoissonSolver, fft2d, fft3d, fftnd,
-                  ifft2d, ifft3d, ifftnd, plan_fft, poisson_eigenvalues,
-                  poisson_solve)
+                  ifft2d, ifft3d, ifftnd, plan_cache_stats, plan_fft,
+                  poisson_eigenvalues, poisson_solve)
 from .decomp import (Decomposition, RedistHop, Redistribution, StageLayout,
                      default_dim_groups, hybrid_nd, local_shape,
                      make_decomposition, pencil, pencil_nd, slab, slab_nd,
@@ -18,7 +18,8 @@ from .pipeline import (PipelineSpec, build_pipeline, build_segment,
                        input_struct, make_spec, n_segments, output_struct,
                        segment_structs)
 from .plan import (GLOBAL_PLAN_CACHE, PlanCache, TunedPlan, TuningCache,
-                   global_tuning_cache, plan_key, tuning_key)
+                   global_tuning_cache, parse_tuning_key, plan_key,
+                   tuning_key)
 from .redistribute import free_chunk_dim, redistribute, transpose_cost_bytes
 from .scheduler import (CostModel, ScheduleSimulator, TaskSpec,
                         WorkStealingPool, choose_chunk_schedule,
@@ -26,11 +27,12 @@ from .scheduler import (CostModel, ScheduleSimulator, TaskSpec,
 from .tuner import (Candidate, enumerate_candidates,
                     feasible_hop_chunk_counts, measure_candidate,
                     propose_chunk_schedule, rank_candidates,
-                    resolve_profile, resolve_tuned_plan, synth_input, tune)
+                    resolve_profile, resolve_tuned_plan, synth_input, tune,
+                    warm_candidates)
 from . import transforms
 
 __all__ = [
-    "DistributedFFT", "plan_fft", "PoissonSolver",
+    "DistributedFFT", "plan_fft", "PoissonSolver", "plan_cache_stats",
     "fft3d", "ifft3d", "fft2d", "ifft2d", "fftnd", "ifftnd",
     "poisson_solve", "poisson_eigenvalues",
     "Decomposition", "RedistHop", "Redistribution", "StageLayout",
@@ -43,13 +45,14 @@ __all__ = [
     "PlanStreamExecutor", "SegmentTask", "execute_many",
     "CostModel", "ScheduleSimulator", "TaskSpec", "WorkStealingPool",
     "place_tasks",
-    "GLOBAL_PLAN_CACHE", "PlanCache", "plan_key",
+    "GLOBAL_PLAN_CACHE", "PlanCache", "plan_key", "parse_tuning_key",
     "TunedPlan", "TuningCache", "global_tuning_cache", "tuning_key",
     "Machine", "MachineProfile", "calibrate", "hop_cost_terms",
     "predict_plan_time", "profile_from_machine", "stage_comp_times",
     "Candidate", "enumerate_candidates", "feasible_hop_chunk_counts",
     "measure_candidate", "propose_chunk_schedule", "rank_candidates",
     "resolve_profile", "resolve_tuned_plan", "synth_input", "tune",
+    "warm_candidates",
     "choose_chunk_schedule", "hop_phase_time",
     "free_chunk_dim", "redistribute", "transpose_cost_bytes", "transforms",
 ]

@@ -624,6 +624,7 @@ def _plan_memo_capacity() -> int:
 
 _PLAN_MEMO: "OrderedDict[Any, Any]" = OrderedDict()
 _PLAN_MEMO_LOCK = threading.Lock()
+_MEMO_COUNTERS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
 def _memoized(key: Any, factory: Callable[[], Any]) -> Any:
@@ -631,16 +632,22 @@ def _memoized(key: Any, factory: Callable[[], Any]) -> Any:
         obj = _PLAN_MEMO.get(key)
         if obj is not None:
             _PLAN_MEMO.move_to_end(key)
+            _MEMO_COUNTERS["hits"] += 1
             return obj
     obj = factory()
     with _PLAN_MEMO_LOCK:
         # Another thread may have raced us; keep the first instance so every
         # caller shares one set of compiled executables.
         won = _PLAN_MEMO.setdefault(key, obj)
+        if won is obj:
+            _MEMO_COUNTERS["misses"] += 1
+        else:
+            _MEMO_COUNTERS["hits"] += 1
         _PLAN_MEMO.move_to_end(key)
         cap = _plan_memo_capacity()
         while len(_PLAN_MEMO) > cap:
             _PLAN_MEMO.popitem(last=False)
+            _MEMO_COUNTERS["evictions"] += 1
         return won
 
 
@@ -648,12 +655,30 @@ def clear_plan_memo() -> None:
     """Drop the wrappers' memoized plan/solver objects (tests)."""
     with _PLAN_MEMO_LOCK:
         _PLAN_MEMO.clear()
+        for k in _MEMO_COUNTERS:
+            _MEMO_COUNTERS[k] = 0
 
 
 def plan_memo_stats() -> Dict[str, int]:
     with _PLAN_MEMO_LOCK:
         return {"plans": len(_PLAN_MEMO),
-                "capacity": _plan_memo_capacity()}
+                "capacity": _plan_memo_capacity(),
+                **_MEMO_COUNTERS}
+
+
+def plan_cache_stats() -> Dict[str, Dict[str, Any]]:
+    """Public counters of both in-process plan-caching layers.
+
+    ``compiled`` — the LRU :data:`~repro.core.plan.GLOBAL_PLAN_CACHE` of
+    compiled executables (fused pipelines and stage segments);
+    ``memo`` — the wrappers' plan-handle memo (``fftnd``/``poisson_solve``).
+    Each carries ``hits``/``misses``/``evictions`` plus occupancy, so a
+    serving metrics layer can report plan-cache health without reaching
+    into private counters.
+    """
+    from .plan import GLOBAL_PLAN_CACHE
+    return {"compiled": GLOBAL_PLAN_CACHE.stats(),
+            "memo": plan_memo_stats()}
 
 
 def _wrapper_plan(mesh: Mesh, grid, kinds, batch_shape, dtype, decomp,

@@ -436,6 +436,18 @@ class PlanStreamExecutor:
         """The dispatch order the last run chose (SegmentTask records)."""
         return list(self._last_schedule)
 
+    def entry_times(self) -> Dict[str, float]:
+        """Measured wall seconds per entry tag from the last **timed** run
+        (sum of its segments' measured durations; empty after async/pool
+        runs).  The serving layer uses this for per-request latency
+        attribution when the watchdog is wired."""
+        out: Dict[str, float] = {}
+        for seg in self._last_schedule:
+            if seg.measured_s > 0:
+                base = seg.tag.rsplit("/seg", 1)[0]
+                out[base] = out.get(base, 0.0) + seg.measured_s
+        return out
+
     @property
     def stragglers(self) -> List[Tuple[str, float]]:
         """Watchdog-flagged segments of all runs: ``(tag, seconds)``."""

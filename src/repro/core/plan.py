@@ -70,6 +70,7 @@ class PlanCache:
         self._capacity = capacity
         self.misses = 0
         self.hits = 0
+        self.evictions = 0
 
     @property
     def capacity(self) -> int:
@@ -101,6 +102,7 @@ class PlanCache:
                 self.misses += 1
                 while len(self._plans) > self.capacity:
                     self._plans.popitem(last=False)
+                    self.evictions += 1
             else:
                 entry.hits += 1
                 self.hits += 1
@@ -114,6 +116,7 @@ class PlanCache:
                 "capacity": self.capacity,
                 "hits": self.hits,
                 "misses": self.misses,
+                "evictions": self.evictions,
                 "total_build_time_s": sum(
                     e.build_time_s for e in self._plans.values()),
             }
@@ -123,6 +126,7 @@ class PlanCache:
             self._plans.clear()
             self.hits = 0
             self.misses = 0
+            self.evictions = 0
 
 
 # Process-global default cache (mirrors the paper's per-process plan store).
@@ -235,6 +239,45 @@ def tuning_key(*, grid: Sequence[int], mesh_shape: Sequence[int],
     if op != "fft":
         parts.append("op=" + op)
     return ";".join(parts)
+
+
+def parse_tuning_key(key: str) -> Optional[Dict[str, Any]]:
+    """Invert :func:`tuning_key`: one wisdom key back into its problem.
+
+    Returns ``None`` for keys this version cannot read (unknown fields,
+    missing required parts) rather than raising — the wisdom file is shared
+    across versions and a warm-start pass must simply skip what it cannot
+    rebuild.  The returned dict carries ``grid``/``mesh_shape``/``mesh_axes``
+    /``kinds``/``dtype``/``inverse``/``batch_shape``/``platform``/``op``
+    with the same types :func:`tuning_key` accepted.
+    """
+    fields: Dict[str, str] = {}
+    for part in key.split(";"):
+        name, sep, val = part.partition("=")
+        if not sep:
+            return None
+        fields[name] = val
+
+    def ints(raw: str) -> Tuple[int, ...]:
+        return tuple(int(v) for v in raw.split(",")) if raw else ()
+
+    def strs(raw: str) -> Tuple[str, ...]:
+        return tuple(raw.split(",")) if raw else ()
+
+    try:
+        return {
+            "grid": ints(fields["grid"]),
+            "mesh_shape": ints(fields["mesh"]),
+            "mesh_axes": strs(fields["axes"]),
+            "kinds": strs(fields["kinds"]),
+            "dtype": fields["dtype"],
+            "inverse": bool(int(fields["inv"])),
+            "batch_shape": ints(fields["batch"]),
+            "platform": fields["plat"],
+            "op": fields.get("op", "fft"),
+        }
+    except (KeyError, ValueError):
+        return None
 
 
 def default_tuning_path() -> str:
@@ -402,6 +445,13 @@ class TuningCache:
     def __len__(self) -> int:
         with self._lock:
             return len(self._plans)
+
+    def items(self) -> Tuple[Tuple[str, TunedPlan], ...]:
+        """Snapshot of every persisted (key, plan) pair — the warm-start
+        enumeration surface (``serving.PlanWarmer``); pair with
+        :func:`parse_tuning_key` to recover each key's problem."""
+        with self._lock:
+            return tuple(self._plans.items())
 
     def stats(self) -> Dict[str, Any]:
         with self._lock:

@@ -64,7 +64,8 @@ from .perfmodel import (CPU_CORE, TPU_V5E, Machine, MachineProfile,
 from .pipeline import (PipelineSpec, chunk_sites, compile_pipeline,
                        effective_grid, input_struct, make_spec,
                        output_struct)
-from .plan import (TunedPlan, TuningCache, global_tuning_cache, tuning_key)
+from .plan import (TunedPlan, TuningCache, global_tuning_cache,
+                   parse_tuning_key, tuning_key)
 from .scheduler import choose_chunk_schedule
 
 # The tuner's full backend space — mirrors ``transforms.LOCAL_BACKENDS``.
@@ -655,3 +656,37 @@ def tune(grid: Sequence[int], mesh: Mesh, *,
         # would permanently replace a better unrestricted plan.
         cache.put(key, plan)
     return plan
+
+
+def warm_candidates(cache: TuningCache, mesh: Mesh, *,
+                    platform: Optional[str] = None,
+                    ops: Sequence[str] = ("fft",)
+                    ) -> List[Dict[str, object]]:
+    """Persisted tuning decisions this process could serve warm.
+
+    Enumerates the wisdom file's keys (``TuningCache.items`` +
+    ``parse_tuning_key``) and keeps those matching this ``platform`` and
+    ``mesh`` geometry (shape *and* axis names — a plan tuned on a (2, 4)
+    mesh is not the plan for a (4, 2) one) whose measured ``op`` is in
+    ``ops``.  Each returned dict is the parsed problem plus its
+    ``"tuned"`` :class:`TunedPlan` — everything ``plan_fft`` needs to
+    rebuild (and recompile) the winning plan without a single measurement.
+    Unreadable keys (other schema versions) are skipped, not raised on:
+    warm-start must never be blocked by foreign wisdom.
+    """
+    platform = platform if platform is not None else jax.default_backend()
+    mesh_shape = tuple(mesh.devices.shape)
+    mesh_axes = tuple(mesh.axis_names)
+    out: List[Dict[str, object]] = []
+    for key, tuned in cache.items():
+        prob = parse_tuning_key(key)
+        if prob is None or prob["platform"] != platform:
+            continue
+        if prob["mesh_shape"] != mesh_shape or prob["mesh_axes"] != mesh_axes:
+            continue
+        if prob["op"] not in ops or prob["inverse"]:
+            continue
+        prob["tuned"] = tuned
+        prob["key"] = key
+        out.append(prob)
+    return out

@@ -42,6 +42,11 @@ def serve(arch: str, *, smoke: bool = True, requests: int = 8,
         wd = StepWatchdog(tolerance=4.0)
 
         done = 0
+        # Monotonic global watchdog step id: `done + i` collided across
+        # batches (batch 2's step 0 reused batch 1's ids), making straggler
+        # attribution ambiguous.  serve_fft.py follows the same convention
+        # (the PlanStreamExecutor's internal counter is likewise global).
+        step = 0
         results = []
         while done < requests:
             n = min(batch, requests - done)
@@ -53,7 +58,8 @@ def serve(arch: str, *, smoke: bool = True, requests: int = 8,
             cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             outs = [cur]
             for i in range(max_new - 1):
-                wd.start(done + i)
+                wd.start(step)
+                step += 1
                 nxt, _, caches = decode(params, caches, cur,
                                         jnp.asarray(prompt_len + i,
                                                     jnp.int32))

@@ -1,0 +1,18 @@
+# Spectral serving: the long-running FFT service layer (ISSUE 8 tentpole).
+# Composes the plan-once/execute-many core (DistributedFFT + the
+# PlanStreamExecutor segment stream), the wisdom cache (warm start), and
+# the fault layer (StepWatchdog straggler attribution, elastic degraded-
+# mesh recovery) under sustained mixed-shape traffic.
+from .metrics import ServingMetrics
+from .router import (BATCH_BUCKETS, DEFAULT_BUCKET_EDGES, FFTRequest,
+                     FFTResult, PlanFamily, ShapeRouter)
+from .service import FFTService
+from .warmer import PlanWarmer, WarmReport
+
+__all__ = [
+    "ServingMetrics",
+    "FFTRequest", "FFTResult", "PlanFamily", "ShapeRouter",
+    "DEFAULT_BUCKET_EDGES", "BATCH_BUCKETS",
+    "FFTService",
+    "PlanWarmer", "WarmReport",
+]

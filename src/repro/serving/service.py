@@ -1,0 +1,193 @@
+"""The long-running FFT service: warm plans, route traffic, survive loss.
+
+``FFTService`` is the composition point of the whole repro stack under a
+serving contract:
+
+* **startup** — ``warm()`` replays the wisdom file into hot plan families
+  and compiled segment executables (:mod:`.warmer`);
+* **steady state** — ``submit()`` queues requests; ``drain()`` routes
+  them through the :class:`~.router.ShapeRouter` (bucketing, padding,
+  leading-dim batching), pushes the coalesced entries through **one
+  persistent** :class:`~repro.core.executor.PlanStreamExecutor` (segment
+  streams interleave across buckets; the wired
+  :class:`~repro.distributed.fault.StepWatchdog` times every segment and
+  attributes stragglers per hop), then applies the unpad epilogue and
+  stamps per-request latency into :class:`~.metrics.ServingMetrics`;
+* **failure** — ``lose_devices()`` simulates losing the tail of the
+  device list mid-stream: survivors re-shape via
+  ``choose_fft_mesh_shape`` (divisibility against every grid the service
+  has promised to serve), a fresh router re-plans every known family onto
+  the degraded mesh, the watchdog's rolling window resets (the slower
+  baseline is *legitimate*), and pending plus subsequent requests keep
+  completing — degraded, not down.
+
+The executor and its step counter persist across the mesh change: plans
+are mesh-bound, the segment stream is not, so watchdog step ids stay
+globally monotonic through a failover (the same convention
+``launch/serve.py`` uses).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from ..core.executor import PlanStreamExecutor
+from ..core.plan import TuningCache
+from ..distributed.fault import StepWatchdog, choose_fft_mesh_shape
+from .metrics import ServingMetrics
+from .router import FFTRequest, FFTResult, ShapeRouter, DEFAULT_BUCKET_EDGES
+from .warmer import PlanWarmer, WarmReport
+
+
+class FFTService:
+    """Plan-warmed, shape-bucketed, loss-tolerant distributed FFT serving."""
+
+    def __init__(self, mesh, *, tune_cache: Optional[TuningCache] = None,
+                 bucket_edges: Sequence[int] = DEFAULT_BUCKET_EDGES,
+                 max_batch: int = 8, watchdog: Optional[StepWatchdog] = None,
+                 watchdog_tolerance: float = 4.0,
+                 metrics: Optional[ServingMetrics] = None):
+        self.tune_cache = tune_cache
+        self.metrics = metrics if metrics is not None else ServingMetrics()
+        self.watchdog = (watchdog if watchdog is not None
+                         else StepWatchdog(tolerance=watchdog_tolerance))
+        # ONE executor for the service lifetime (it is not mesh-bound);
+        # watchdog= implies timed dispatch, so every segment is measured.
+        self.executor = PlanStreamExecutor(watchdog=self.watchdog)
+        self._bucket_edges = tuple(bucket_edges)
+        self._max_batch = max_batch
+        self.degraded = False
+        self._pending: List[FFTRequest] = []
+        self._next_id = 0
+        self._install_mesh(mesh)
+
+    def _install_mesh(self, mesh) -> None:
+        self.mesh = mesh
+        self.router = ShapeRouter(mesh, tune_cache=self.tune_cache,
+                                  bucket_edges=self._bucket_edges,
+                                  max_batch=self._max_batch,
+                                  metrics=self.metrics)
+        self.warmer = PlanWarmer(mesh, self.tune_cache, router=self.router)
+
+    # -- startup ------------------------------------------------------------
+
+    def warm(self, *, ensure: Sequence[Tuple] = (),
+             prebuild_segments: bool = True) -> WarmReport:
+        """Warm plan families from the wisdom file (plus ``ensure`` seeds)."""
+        return self.warmer.warm(ensure=ensure,
+                                prebuild_segments=prebuild_segments)
+
+    # -- steady state -------------------------------------------------------
+
+    def submit(self, x, kinds: Optional[Sequence[str]] = None, *,
+               exact: bool = False) -> int:
+        """Queue one request (a single batch-free operand); returns its id.
+        Nothing executes until :meth:`drain` — coalescing needs a queue."""
+        kinds = tuple(kinds) if kinds is not None else ("fft",) * x.ndim
+        rid = self._next_id
+        self._next_id += 1
+        self._pending.append(FFTRequest(id=rid, x=x, kinds=kinds,
+                                        exact=exact))
+        self.metrics.record_submit()
+        self.metrics.record_queue_depth(len(self._pending))
+        return rid
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._pending)
+
+    def drain(self) -> Dict[int, FFTResult]:
+        """Route + execute every pending request; returns results by id.
+
+        One drain is one executor stream: all buckets' segment chains
+        interleave (different buckets overlap compute with each other's
+        collectives), each segment feeds the watchdog.
+        """
+        if not self._pending:
+            return {}
+        pending, self._pending = self._pending, []
+        routed = self.router.route(pending)
+        self.metrics.record_batch(len(routed))
+        for rb in routed:
+            self.executor.submit(rb.plan, rb.x, tag=rb.tag)
+        outs = self.executor.run()
+        jax.block_until_ready(outs)
+        self.metrics.record_stragglers(len(self.watchdog.flagged))
+        now = time.perf_counter()
+        results: Dict[int, FFTResult] = {}
+        for rb, y in zip(routed, outs):
+            for i, member in enumerate(rb.members):
+                yi = ShapeRouter.unpad(y[i], member, rb.bucket_grid)
+                res = FFTResult(
+                    id=member.id, y=yi, bucket_grid=rb.bucket_grid,
+                    padded=tuple(member.x.shape) != tuple(rb.bucket_grid),
+                    plan_hit=rb.plan_hit, degraded=self.degraded,
+                    latency_s=now - member.t_submit)
+                self.metrics.record_done(res.latency_s)
+                results[member.id] = res
+        return results
+
+    def run_pending_retunes(self, max_n: Optional[int] = None) -> int:
+        """Drain the router's background re-tune queue (measured searches,
+        persisted to the wisdom file).  Call between drains, never during."""
+        return self.router.run_pending_retunes(max_n)
+
+    # -- failure ------------------------------------------------------------
+
+    def _served_dims(self) -> Tuple[int, ...]:
+        """Every dim extent the degraded mesh must keep divisible: all
+        known family grids plus the bucket grids of pending requests."""
+        dims = set()
+        for grid in self.router.known_grids:
+            dims.update(grid)
+        for req in self._pending:
+            dims.update(self.router.bucket_grid(req.grid, req.kinds,
+                                                exact=req.exact))
+        return tuple(sorted(dims))
+
+    def lose_devices(self, n_lost: int) -> Tuple[int, ...]:
+        """Simulate losing ``n_lost`` devices; re-plan onto the survivors.
+
+        Drops the tail of the flattened device list (deterministic — the
+        subprocess tests assert bit-correctness against an independently
+        built mesh of the same survivors), shapes the remainder with
+        ``choose_fft_mesh_shape`` so every served grid stays divisible,
+        rebuilds the router and eagerly re-plans every known family onto
+        the degraded mesh.  Pending requests are NOT dropped: the next
+        :meth:`drain` completes them on the survivors.
+        """
+        devs = list(self.mesh.devices.flatten())
+        survivors = devs[:len(devs) - int(n_lost)]
+        if not survivors:
+            raise ValueError("device loss left no survivors")
+        shape = choose_fft_mesh_shape(len(survivors),
+                                      grid=self._served_dims() or None)
+        names = (tuple(self.mesh.axis_names) if
+                 len(self.mesh.axis_names) == 2 else ("data", "model"))
+        arr = np.array(survivors[:shape[0] * shape[1]],
+                       dtype=object).reshape(shape)
+        old_families = list(self.router.families.values())
+        self._install_mesh(jax.sharding.Mesh(arr, names))
+        # Known families re-plan immediately (heuristic knobs on the new
+        # geometry; measured upgrades queue behind run_pending_retunes) so
+        # in-flight and follow-on traffic stays plan-cache hot.
+        for fam in old_families:
+            self.router.resolve_family(fam.grid, fam.kinds, fam.dtype)
+        # The degraded mesh is legitimately slower — seed a fresh straggler
+        # baseline instead of flagging every post-failover step.
+        self.watchdog.reset_window()
+        self.degraded = True
+        self.metrics.mark_degraded()
+        return shape
+
+    # -- introspection ------------------------------------------------------
+
+    def describe(self) -> str:
+        fams = self.router.families
+        return (f"FFTService(mesh={tuple(self.mesh.devices.shape)}, "
+                f"families={len(fams)}, pending={len(self._pending)}, "
+                f"degraded={self.degraded}, "
+                f"hit_rate={self.metrics.plan_hit_rate:.2f})")

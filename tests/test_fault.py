@@ -1,0 +1,151 @@
+"""Fault-layer unit tests: watchdog window hygiene + elastic mesh shapes.
+
+The watchdog tests drive an injected fake clock (no sleeps, no flaky
+timing): the regression they pin is the rolling-window poisoning bug,
+where flagged straggler durations entered the median window and a
+*sustained* slowdown re-normalized itself after ~window/2 steps — the
+watchdog stopped flagging exactly the condition it exists to keep
+visible.
+"""
+import pytest
+
+from repro.distributed.fault import (StepWatchdog, choose_fft_mesh_shape,
+                                     choose_mesh_shape)
+
+
+class FakeClock:
+    """Deterministic timer: each step's duration is scripted."""
+
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self):
+        return self.now
+
+    def step(self, wd, step_id, duration):
+        wd.start(step_id)
+        self.now += duration
+        return wd.stop()
+
+
+# ---------------------------------------------------------------- watchdog
+
+def test_watchdog_flags_spike():
+    clk = FakeClock()
+    wd = StepWatchdog(tolerance=2.0, window=16, timer=clk)
+    for s in range(10):
+        clk.step(wd, s, 1.0)
+    clk.step(wd, 10, 5.0)
+    assert [s for s, _ in wd.flagged] == [10]
+    clk.step(wd, 11, 1.0)          # back to normal: not flagged
+    assert len(wd.flagged) == 1
+
+
+def test_watchdog_sustained_slowdown_stays_flagged():
+    """The window-poisoning regression: a persistent 5x slowdown must be
+    flagged on EVERY step, not only until the slow samples take over the
+    median.  With the old append-then-flag behavior, a window of 16 was
+    half-poisoned after 8 slow steps and the flagging stopped."""
+    clk = FakeClock()
+    wd = StepWatchdog(tolerance=2.0, window=16, timer=clk)
+    for s in range(16):
+        clk.step(wd, s, 1.0)
+    n_slow = 50                    # >> window: would fully re-normalize
+    for s in range(16, 16 + n_slow):
+        clk.step(wd, s, 5.0)
+    flagged_steps = [s for s, _ in wd.flagged]
+    assert flagged_steps == list(range(16, 16 + n_slow))
+    # The median still describes *normal* steps.
+    assert wd.median_s == pytest.approx(1.0)
+
+
+def test_watchdog_flagged_samples_stay_out_of_window():
+    clk = FakeClock()
+    wd = StepWatchdog(tolerance=2.0, window=16, timer=clk)
+    for s in range(10):
+        clk.step(wd, s, 1.0)
+    clk.step(wd, 10, 100.0)
+    assert 100.0 not in wd.durations
+    assert max(wd.durations) == pytest.approx(1.0)
+
+
+def test_watchdog_reset_window_accepts_new_baseline():
+    """After a legitimate baseline shift (degraded-mesh re-plan), reset
+    seeds a fresh median: the slower steps become the new normal instead
+    of being flagged forever."""
+    clk = FakeClock()
+    wd = StepWatchdog(tolerance=2.0, window=16, timer=clk)
+    for s in range(10):
+        clk.step(wd, s, 1.0)
+    wd.reset_window()
+    for s in range(10, 22):
+        clk.step(wd, s, 5.0)       # 5x the old baseline, all steps
+    assert not [s for s, _ in wd.flagged if s >= 10]
+    assert wd.median_s == pytest.approx(5.0)
+    # Flag history survives the reset (it's the window that drops).
+    clk.step(wd, 22, 25.0)
+    assert [s for s, _ in wd.flagged] == [22]
+
+
+# ------------------------------------------------- choose_mesh_shape edges
+
+def test_choose_mesh_shape_pod_remainder_ranks():
+    # 300 survivors, 256-rank pods: only one full pod remains — the 44
+    # remainder ranks are wasted rather than forming a ragged pod.
+    assert choose_mesh_shape(300, 16, pod_size=256) == (16, 16)
+
+
+def test_choose_mesh_shape_just_below_pod_boundary():
+    # 511 survivors is one short of two pods: falls back to a single pod.
+    assert choose_mesh_shape(511, 16, pod_size=256) == (16, 16)
+    assert choose_mesh_shape(512, 16, pod_size=256) == (2, 16, 16)
+
+
+def test_choose_mesh_shape_survivors_below_model_parallel():
+    with pytest.raises(ValueError):
+        choose_mesh_shape(3, 4)
+    with pytest.raises(ValueError):
+        choose_mesh_shape(15, 16, pod_size=256)
+
+
+def test_choose_mesh_shape_data_remainder():
+    # Non-multiple survivors shrink the data axis, wasting the remainder.
+    assert choose_mesh_shape(250, 16) == (15, 16)
+    assert choose_mesh_shape(16, 16) == (1, 16)
+
+
+# ------------------------------------------------- choose_fft_mesh_shape
+
+def test_fft_mesh_shape_prefers_balanced():
+    # All of 8 usable for a (16, 32) grid; (4, 2) beats (8, 1) on balance.
+    assert choose_fft_mesh_shape(8, (16, 32)) == (4, 2)
+    assert choose_fft_mesh_shape(8) == (4, 2)   # no grid: same answer
+
+
+def test_fft_mesh_shape_divisibility_drops_devices():
+    # 5 survivors: 5 divides neither 16 nor 32, so the best usable count
+    # is 4 -> (2, 2).  6 survivors: 6 and 3 both fail, same (2, 2).
+    assert choose_fft_mesh_shape(5, (16, 32)) == (2, 2)
+    assert choose_fft_mesh_shape(6, (16, 32)) == (2, 2)
+
+
+def test_fft_mesh_shape_odd_grid():
+    # 7 divides both 14 and 21 -> all 7 devices usable as (7, 1).
+    assert choose_fft_mesh_shape(7, (14, 21)) == (7, 1)
+    # 3 survivors for a pow2 grid: only (2, 1) is feasible.
+    assert choose_fft_mesh_shape(3, (16, 32)) == (2, 1)
+
+
+def test_fft_mesh_shape_degenerate():
+    assert choose_fft_mesh_shape(1, (16, 16)) == (1, 1)
+    # Prime grid dims: nothing >1 divides them, single device serves.
+    assert choose_fft_mesh_shape(8, (13, 17)) == (1, 1)
+    with pytest.raises(ValueError):
+        choose_fft_mesh_shape(0, (16, 16))
+
+
+def test_fft_mesh_shape_data_major():
+    for n in range(1, 17):
+        d, m = choose_fft_mesh_shape(n, (16, 32) if n % 3 else None)
+        assert d >= m >= 1
+        assert d * m <= n
