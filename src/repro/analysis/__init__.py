@@ -1,0 +1,29 @@
+"""Static verification for the plan/executor stack.
+
+Three passes, none of which executes a single segment:
+
+* :mod:`.schedule_check` — model-checks a ``PlanStreamExecutor``'s
+  planned dispatch against the reachable interleavings of its dispatch
+  mode (the PR 7 pool-mode collective-ordering deadlock class,
+  cross-entry use-after-donate, donate-on-shared-plan, double-donation
+  aliasing, per-entry segment order);
+* :mod:`.contracts` — checks a compiled plan's segment chain against
+  the sharding contracts the pipeline relies on (boundary layout
+  equality via independent hop replay, chunk-schedule divisibility,
+  grid/mesh divisibility, plan-key collision audit across the cache
+  layers);
+* :mod:`.lint` — AST-based repo-specific rules (REP001..REP005),
+  runnable as ``python -m repro.analysis.lint``.
+
+All three emit one structured, JSON-dumpable :class:`Diagnostic`
+stream; see :mod:`.diagnostics`.
+"""
+from .diagnostics import (Diagnostic, DiagnosticReport,
+                          PlanVerificationError)
+from .contracts import check_plan, audit_plan_keys
+from .schedule_check import check_schedule
+
+__all__ = [
+    "Diagnostic", "DiagnosticReport", "PlanVerificationError",
+    "check_plan", "audit_plan_keys", "check_schedule",
+]

@@ -1,0 +1,223 @@
+"""Model-check a PlanStreamExecutor's planned dispatch — before it runs.
+
+The executor's :meth:`~repro.core.executor.PlanStreamExecutor._plan_schedule`
+prices, places and orders the queue *without executing anything*, so the
+chosen dispatch order plus the dispatch mode fully determine which launch
+interleavings are reachable at run time.  This pass checks those
+interleavings statically:
+
+* **SCHED001 — cross-lane collective-ordering deadlock** (the PR 7 pool
+  bug).  Every segment with ``index >= 1`` contains ``all_to_all``
+  collectives spanning the whole mesh.  If two such launches can happen
+  concurrently (they are unordered in the reachable-interleaving partial
+  order), different devices may enqueue the two executables in different
+  orders and the cross-executable rendezvous deadlocks.  ``mode="async"``
+  and ``mode="timed"`` dispatch from one thread (a total order);
+  ``mode="pool"`` runs one worker per lane with whole-entry stealing, so
+  *any* two entries' chains may interleave — the dispatch lock
+  (``serialize_dispatch=True``) is what collapses that to one consistent
+  linearization per run.  With the lock off, this pass enumerates the
+  reachable pool-mode interleavings of the per-entry collective chains
+  (exhaustively up to a cap; the pairwise criterion is exact beyond it)
+  and reports every collective pair observable in both orders.
+* **DON001 — cross-entry use-after-donate.**  An entry submitted with
+  ``donate=True`` consumes its operand buffer at segment 0.  If another
+  entry was submitted with the *same* buffer, any reachable interleaving
+  that runs the donating entry's segment 0 first invalidates the other
+  entry's input.
+* **DON002 — donation on a shared plan** (wrapper-memoized plans refuse
+  donation; re-checked here so a verify pass catches handles whose
+  ``shared`` flag was set after submit).
+* **ALIAS001 — double donation**: one buffer donated by two entries is
+  wrong in every interleaving.
+* **SCHED002 — per-entry segment-order violation**: each entry's segments
+  must appear exactly once, in index order, in the dispatch order (the
+  double-buffered workspace chain is a dependency chain).
+
+All findings are :class:`~.diagnostics.Diagnostic` records; nothing here
+touches a device.
+"""
+from __future__ import annotations
+
+from itertools import combinations
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+from .diagnostics import Diagnostic, DiagnosticReport
+
+# Above this many distinct interleavings, fall back to the pairwise
+# criterion (two chains' elements are unordered iff they belong to
+# different chains — exact for the chain-only partial order, so the cap
+# changes cost, not verdicts).
+INTERLEAVING_CAP = 5000
+
+
+def _entry_tag(entries, i: int) -> str:
+    tag = getattr(entries[i], "tag", None)
+    return tag if tag else f"entry{i}"
+
+
+# -- reachable-interleaving exploration --------------------------------------
+
+def count_interleavings(chains: Sequence[Sequence[str]]) -> int:
+    """Number of distinct merges of the chains (multinomial coefficient)."""
+    total, ways = 0, 1
+    for c in chains:
+        for k in range(1, len(c) + 1):
+            total += 1
+            ways = ways * total // k
+    return ways
+
+
+def enumerate_interleavings(chains: Sequence[Sequence[str]]
+                            ) -> Iterable[Tuple[str, ...]]:
+    """All reachable launch orders of per-entry chains (chain order kept)."""
+    heads = [0] * len(chains)
+    prefix: List[str] = []
+
+    def rec():
+        live = [i for i, c in enumerate(chains) if heads[i] < len(c)]
+        if not live:
+            yield tuple(prefix)
+            return
+        for i in live:
+            prefix.append(chains[i][heads[i]])
+            heads[i] += 1
+            yield from rec()
+            heads[i] -= 1
+            prefix.pop()
+
+    return rec()
+
+
+def racy_collective_pairs(chains: Sequence[Sequence[str]],
+                          cap: int = INTERLEAVING_CAP
+                          ) -> List[Tuple[str, str]]:
+    """Collective pairs observable in both orders across reachable
+    interleavings.  Exhaustive when the interleaving count fits under
+    ``cap``; otherwise the exact pairwise rule for a union-of-chains
+    partial order (elements of different chains are always unordered)."""
+    chains = [list(c) for c in chains if c]
+    if len(chains) < 2:
+        return []
+    if count_interleavings(chains) <= cap:
+        seen_orders: Dict[Tuple[str, str], set] = {}
+        for inter in enumerate_interleavings(chains):
+            for a, b in combinations(inter, 2):
+                key = (a, b) if a <= b else (b, a)
+                seen_orders.setdefault(key, set()).add(
+                    "ab" if (a, b) == key else "ba")
+        return sorted(k for k, orders in seen_orders.items()
+                      if len(orders) == 2)
+    pairs = []
+    for ci, cj in combinations(chains, 2):
+        for a in ci:
+            for b in cj:
+                pairs.append((a, b) if a <= b else (b, a))
+    return sorted(set(pairs))
+
+
+# -- the checker -------------------------------------------------------------
+
+def check_schedule(order: Sequence, entries: Sequence, *,
+                   mode: str = "async",
+                   serialized: bool = True) -> DiagnosticReport:
+    """Statically verify one planned dispatch.
+
+    ``order`` is the executor's merged dispatch order (``SegmentTask``
+    records) and ``entries`` the queue it was planned from (objects with
+    ``plan`` / ``x`` / ``donate`` / ``tag`` / ``segments``).  ``mode`` and
+    ``serialized`` describe how the executor would launch it.
+    """
+    report = DiagnosticReport()
+
+    # SCHED002: each entry's segments exactly once, in index order.
+    per_entry: Dict[int, List[int]] = {}
+    for seg in order:
+        per_entry.setdefault(seg.entry, []).append(seg.index)
+    for i, entry in enumerate(entries):
+        want = list(range(len(entry.segments)))
+        got = per_entry.get(i, [])
+        if got != want:
+            report.add(Diagnostic(
+                code="SCHED002", severity="error",
+                message=(f"entry {_entry_tag(entries, i)}: dispatch order "
+                         f"visits segments {got}, expected {want} (each "
+                         f"exactly once, in index order)"),
+                hint="segment chains are dependency chains; do not reorder "
+                     "or duplicate an entry's segments across lanes",
+                plan_key=_entry_tag(entries, i)))
+
+    # DON002: donation against a shared plan.
+    for i, entry in enumerate(entries):
+        if entry.donate and getattr(entry.plan, "shared", False):
+            report.add(Diagnostic(
+                code="DON002", severity="error",
+                message=(f"entry {_entry_tag(entries, i)} donates its "
+                         f"operand to a shared (wrapper-memoized) plan"),
+                hint="build a private plan via plan_fft for donation, or "
+                     "submit with donate=False",
+                plan_key=_entry_tag(entries, i)))
+
+    # ALIAS001 / DON001: operand aliasing against donation.
+    donors = [i for i, e in enumerate(entries) if e.donate]
+    for a, b in combinations(donors, 2):
+        if entries[a].x is entries[b].x:
+            report.add(Diagnostic(
+                code="ALIAS001", severity="error",
+                message=(f"entries {_entry_tag(entries, a)} and "
+                         f"{_entry_tag(entries, b)} both donate the same "
+                         f"operand buffer — the second launch consumes a "
+                         f"buffer already donated in every interleaving"),
+                hint="donate a buffer from at most one entry per run",
+                plan_key=(f"{_entry_tag(entries, a)}+"
+                          f"{_entry_tag(entries, b)}")))
+    seg0_pos = {seg.entry: pos for pos, seg in enumerate(order)
+                if seg.index == 0}
+    for i in donors:
+        for j, other in enumerate(entries):
+            if j == i or other.x is not entries[i].x or other.donate:
+                continue
+            racy = mode == "pool"   # whole-entry steals: order is a race
+            pos_i, pos_j = seg0_pos.get(i), seg0_pos.get(j)
+            ordered_hazard = (pos_i is not None and pos_j is not None
+                              and pos_i < pos_j)
+            if racy or ordered_hazard:
+                why = ("pool-mode interleaving can run the donating "
+                       "segment 0 first" if racy else
+                       "the dispatch order runs the donating segment 0 "
+                       "first")
+                report.add(Diagnostic(
+                    code="DON001", severity="error",
+                    message=(f"entry {_entry_tag(entries, j)} reads the "
+                             f"operand buffer entry {_entry_tag(entries, i)} "
+                             f"donates: {why}, so entry "
+                             f"{_entry_tag(entries, j)} consumes an "
+                             f"invalidated buffer"),
+                    hint="submit the reading entry first with donate=False "
+                         "ordering in async mode, or copy the operand "
+                         "before donating",
+                    plan_key=(f"{_entry_tag(entries, i)}->"
+                              f"{_entry_tag(entries, j)}")))
+
+    # SCHED001: cross-lane collective launch ordering.  Collective
+    # segments (index >= 1 — each contains the hop's all_to_alls) must be
+    # launched in one device-consistent total order.
+    if mode == "pool" and not serialized:
+        chains = [[s.tag for s in e.segments if s.index >= 1]
+                  for e in entries]
+        pairs = racy_collective_pairs(chains)
+        if pairs:
+            a, b = pairs[0]
+            report.add(Diagnostic(
+                code="SCHED001", severity="error",
+                message=(f"pool-mode dispatch with the dispatch lock "
+                         f"disabled: {len(pairs)} collective pair(s) are "
+                         f"reachable in both launch orders (e.g. {a!r} vs "
+                         f"{b!r}); devices may enqueue the cross-executable "
+                         f"collectives in different orders and deadlock in "
+                         f"the rendezvous"),
+                hint="keep serialize_dispatch=True (every launch holds the "
+                     "dispatch lock) or use mode='async' (single dispatch "
+                     "thread)",
+                plan_key=f"{a}|{b}"))
+    return report

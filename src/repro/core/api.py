@@ -174,6 +174,8 @@ class DistributedFFT:
         # Shared plans (wrapper-memoized: many callers hold the same object)
         # refuse input donation — the caller still owns the buffer.
         self.shared = shared
+        # None until verify() runs; then True (clean) or False (findings).
+        self.verified: Optional[bool] = None
         self._in_struct = input_struct(mesh, fwd_spec, self.batch_shape,
                                        dtype)
         self._out_struct = output_struct(mesh, fwd_spec, self.batch_shape,
@@ -316,6 +318,10 @@ class DistributedFFT:
             f"  compiled: [{', '.join(compiled) or 'none'}] "
             f"(precompiled={self.precompiled}"
             + (", shared" if self.shared else "") + ")",
+            "  verified: " + ("not verified (run plan.verify())"
+                              if self.verified is None else
+                              "contracts clean" if self.verified else
+                              "FINDINGS (see plan.verify() report)"),
         ]
         return "\n".join(lines)
 
@@ -360,6 +366,23 @@ class DistributedFFT:
     def pipeline_spec(self, *, inverse: bool = False) -> PipelineSpec:
         """The lowered :class:`PipelineSpec` of one direction."""
         return self._inv_spec if inverse else self._fwd_spec
+
+    def verify(self, *, tune_cache: Optional[TuningCache] = None,
+               strict: bool = False):
+        """Statically check this plan's sharding contracts (executes
+        nothing): every segment-boundary layout re-derived by hop replay,
+        chunk-schedule and grid/mesh divisibility, and the plan-key
+        collision audit (plus wisdom keys when ``tune_cache`` is given).
+        Returns the :class:`~repro.analysis.DiagnosticReport`;
+        ``strict=True`` raises
+        :class:`~repro.analysis.PlanVerificationError` on any error.
+        ``describe()`` reports the outcome."""
+        from ..analysis import PlanVerificationError, check_plan
+        report = check_plan(self, tune_cache=tune_cache)
+        self.verified = not report.errors
+        if strict and report.errors:
+            raise PlanVerificationError(report, context=repr(self))
+        return report
 
     def _direction_dtype(self, inverse: bool):
         return (self._inv_in_struct if inverse else self._in_struct).dtype
@@ -481,6 +504,42 @@ class DistributedFFT:
         return self.forward(x, **kw)
 
 
+def _validate_dim_groups(groups: Tuple[Tuple[int, ...], ...],
+                         ndim: int) -> None:
+    """Early, specific validation of a hybrid stage grouping.
+
+    ``hybrid_nd`` re-checks the same invariants, but only after tuning
+    policy resolution — by which point the error loses the caller's
+    context.  Failing here names exactly what is wrong with the argument.
+    """
+    if not groups or any(not g for g in groups):
+        raise ValueError(
+            f"plan_fft: dim_groups must be non-empty groups of dims, "
+            f"got {groups!r}")
+    flat = [d for g in groups for d in g]
+    if len(set(flat)) != len(flat):
+        dupes = sorted({d for d in flat if flat.count(d) > 1})
+        raise ValueError(
+            f"plan_fft: dim_groups {groups!r} repeat dim(s) {dupes} — "
+            f"each dim belongs to exactly one stage group")
+    missing = sorted(set(range(ndim)) - set(flat))
+    extra = sorted(set(flat) - set(range(ndim)))
+    if missing or extra:
+        raise ValueError(
+            f"plan_fft: dim_groups {groups!r} must cover dims "
+            f"0..{ndim - 1} exactly"
+            + (f"; missing {missing}" if missing else "")
+            + (f"; out of range {extra}" if extra else ""))
+    if flat != list(range(ndim)):
+        raise ValueError(
+            f"plan_fft: dim_groups {groups!r} must be contiguous groups "
+            f"in ascending dim order, i.e. flatten to "
+            f"{tuple(range(ndim))}")
+
+
+VALIDATE_MODES = ("off", "warn", "strict")
+
+
 def plan_fft(mesh: Mesh, grid: Sequence[int], *,
              kinds: Optional[Sequence[str]] = None,
              batch_shape: Sequence[int] = (), dtype=None,
@@ -491,7 +550,8 @@ def plan_fft(mesh: Mesh, grid: Sequence[int], *,
              tuning: str = "off",
              tune_cache: Optional[TuningCache] = None,
              tune_objective: str = "forward",
-             precompiled: bool = True) -> DistributedFFT:
+             precompiled: bool = True,
+             validate: str = "off") -> DistributedFFT:
     """Build a :class:`DistributedFFT` plan for the trailing ``len(grid)``
     dims of ``batch_shape + grid``-shaped operands.
 
@@ -516,6 +576,11 @@ def plan_fft(mesh: Mesh, grid: Sequence[int], *,
     scheduler policy engine proposes them); ``tune_objective`` selects what
     auto-tuning measures ("forward", or the joint "fwd+scale+inv" round
     trip the :class:`PoissonSolver` runs).
+
+    ``validate`` runs the static contract checker
+    (:func:`repro.analysis.check_plan`) on the finished plan: ``"warn"``
+    reports findings as a warning, ``"strict"`` raises
+    :class:`~repro.analysis.PlanVerificationError`; default ``"off"``.
     """
     grid = tuple(int(n) for n in grid)
     ndim = len(grid)
@@ -528,6 +593,9 @@ def plan_fft(mesh: Mesh, grid: Sequence[int], *,
     if tuning not in TUNING_MODES:
         raise ValueError(f"tuning must be one of {TUNING_MODES}, "
                          f"got {tuning!r}")
+    if validate not in VALIDATE_MODES:
+        raise ValueError(f"validate must be one of {VALIDATE_MODES}, "
+                         f"got {validate!r}")
     batch_shape = tuple(int(n) for n in batch_shape)
     if dtype is None:
         dtype = (jnp.float32 if kinds[0] == "rfft"
@@ -570,6 +638,7 @@ def plan_fft(mesh: Mesh, grid: Sequence[int], *,
         dim_groups = tuple(tuple(int(d) for d in g) for g in dim_groups)
         if decomp != "hybrid":
             raise ValueError("dim_groups only applies to decomp='hybrid'")
+        _validate_dim_groups(dim_groups, ndim)
 
     from .tuner import Candidate, resolve_tuned_plan  # deferred: heavy deps
     default = None
@@ -600,9 +669,17 @@ def plan_fft(mesh: Mesh, grid: Sequence[int], *,
     inv_spec = make_spec(mesh, grid, dec, kinds, backend=tuned.backend,
                          n_chunks=spec_chunks, inverse=True,
                          batch_spec=batch_spec)
-    return DistributedFFT(mesh, fwd_spec, inv_spec, batch_shape=batch_shape,
+    plan = DistributedFFT(mesh, fwd_spec, inv_spec, batch_shape=batch_shape,
                           dtype=dtype, tuned=tuned, tuning=tuning,
                           precompiled=precompiled)
+    if validate != "off":
+        report = plan.verify(tune_cache=tune_cache,
+                             strict=validate == "strict")
+        if report.errors:   # validate == "warn": report and hand back
+            warnings.warn(f"plan_fft(validate='warn'): static contract "
+                          f"findings\n{report.render()}", RuntimeWarning,
+                          stacklevel=2)
+    return plan
 
 
 # ---------------------------------------------------------------------------
@@ -624,7 +701,7 @@ def _plan_memo_capacity() -> int:
 
 _PLAN_MEMO: "OrderedDict[Any, Any]" = OrderedDict()
 _PLAN_MEMO_LOCK = threading.Lock()
-_MEMO_COUNTERS = {"hits": 0, "misses": 0, "evictions": 0}
+_MEMO_COUNTERS = {"hits": 0, "misses": 0, "evictions": 0}  # repro-lint: disable=REP004 fixed-key stats counters, not a growing cache
 
 
 def _memoized(key: Any, factory: Callable[[], Any]) -> Any:
@@ -649,6 +726,12 @@ def _memoized(key: Any, factory: Callable[[], Any]) -> Any:
             _PLAN_MEMO.popitem(last=False)
             _MEMO_COUNTERS["evictions"] += 1
         return won
+
+
+def _plan_memo_keys() -> list:
+    """Snapshot of the wrapper-memo keys (static key audits)."""
+    with _PLAN_MEMO_LOCK:
+        return list(_PLAN_MEMO)
 
 
 def clear_plan_memo() -> None:

@@ -69,11 +69,13 @@ Invariants
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import threading
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 
@@ -83,6 +85,7 @@ from .scheduler import (CostModel, ScheduleSimulator, TaskSpec,
                         WorkStealingPool, hop_phase_time, place_tasks)
 
 DISPATCH_MODES = ("async", "pool", "timed")
+VERIFY_MODES = ("off", "warn", "strict")
 
 
 @dataclasses.dataclass
@@ -193,15 +196,37 @@ class PlanStreamExecutor:
     profile:
         Record measured per-segment durations even without a watchdog
         (forces timed dispatch).
+    verify:
+        ``"off"`` (default) | ``"warn"`` | ``"strict"`` — run the static
+        schedule checker (:func:`repro.analysis.check_schedule`) on every
+        planned dispatch order before anything launches.  ``"warn"``
+        reports findings as a warning and proceeds; ``"strict"`` raises
+        :class:`~repro.analysis.PlanVerificationError` with the queue
+        intact (nothing was dispatched).
+    serialize_dispatch:
+        Hold the global dispatch lock around every segment launch
+        (default True — the collective launch-order invariant).  Setting
+        False re-opens the PR 7 pool-mode deadlock window; it exists so
+        the schedule checker's model of the unserialized executor can be
+        tested, and the checker flags it (SCHED001) whenever the queue
+        makes the deadlock reachable.
+    timer:
+        Clock used for measured segment durations in timed runs
+        (injectable for hermetic tests; default ``time.perf_counter``).
     """
 
     def __init__(self, *, n_streams: int = 2, machine=None,
                  cost_model: Optional[CostModel] = None, watchdog=None,
                  mode: str = "async", donate_intermediates: bool = True,
-                 profile: bool = False):
+                 profile: bool = False, verify: str = "off",
+                 serialize_dispatch: bool = True,
+                 timer: Callable[[], float] = time.perf_counter):
         if mode not in DISPATCH_MODES:
             raise ValueError(f"mode must be one of {DISPATCH_MODES}, "
                              f"got {mode!r}")
+        if verify not in VERIFY_MODES:
+            raise ValueError(f"verify must be one of {VERIFY_MODES}, "
+                             f"got {verify!r}")
         self.n_streams = max(int(n_streams), 1)
         self.machine = machine
         self.cost_model = cost_model if cost_model is not None else CostModel()
@@ -209,6 +234,9 @@ class PlanStreamExecutor:
         self.mode = mode
         self.donate_intermediates = bool(donate_intermediates)
         self.profile = bool(profile)
+        self.verify = verify
+        self.serialize_dispatch = bool(serialize_dispatch)
+        self.timer = timer
         self._queue: List[_Entry] = []
         # Collective-safety: segment executables contain all_to_all
         # collectives spanning every mesh device.  Launching two such
@@ -218,10 +246,12 @@ class PlanStreamExecutor:
         # dispatch therefore goes through one lock — launches are ordered,
         # while execution still overlaps on the async runtime beneath.
         self._dispatch_lock = threading.Lock()
+        self._running = False               # run() re-entrancy guard
         self._step = 0                      # watchdog step counter
         self._step_tags: Dict[int, str] = {}
         self._last_schedule: List[SegmentTask] = []
         self._last_report: Dict[str, Any] = {}
+        self._last_verify = None            # DiagnosticReport of last check
 
     # -- queue management ---------------------------------------------------
 
@@ -256,9 +286,11 @@ class PlanStreamExecutor:
 
     # -- scheduling ---------------------------------------------------------
 
-    def _plan_schedule(self) -> List[SegmentTask]:
+    def _plan_schedule(self, entries: Optional[List[_Entry]] = None
+                       ) -> List[SegmentTask]:
         """Price, place and order the queue; returns the dispatch order."""
-        entries = self._queue
+        if entries is None:
+            entries = self._queue
         for i, e in enumerate(entries):
             e.segments = _entry_segments(i, e, self._machine(), self.cost_model)
             e.total_cost_s = sum(s.cost_s for s in e.segments)
@@ -305,6 +337,20 @@ class PlanStreamExecutor:
         from .tuner import default_machine  # deferred: jax-backend probe
         return default_machine()
 
+    def _check_schedule(self, order: Sequence[SegmentTask],
+                        entries: List[_Entry]):
+        """Static checker over one planned order (no segment executes)."""
+        from ..analysis import check_schedule  # deferred: avoid cycle
+        return check_schedule(order, entries, mode=self.mode,
+                              serialized=self.serialize_dispatch)
+
+    def verify_schedule(self):
+        """Plan the current queue and statically verify it — without
+        consuming the queue or executing a single segment.  Returns the
+        :class:`~repro.analysis.DiagnosticReport`."""
+        return self._check_schedule(self._plan_schedule(self._queue),
+                                    self._queue)
+
     def _simulate(self, order: Sequence[SegmentTask],
                   use_measured: bool = False) -> Dict[str, float]:
         """Deterministic replay of the chosen placement (steal disabled:
@@ -344,7 +390,13 @@ class PlanStreamExecutor:
     def _dispatch_entry_segment(self, entry: _Entry, seg: SegmentTask,
                                 exes: List[Any], bufs: Dict[int, jax.Array]
                                 ) -> None:
-        with self._dispatch_lock:       # consistent collective launch order
+        # Consistent collective launch order across lanes.  Disabling the
+        # lock (serialize_dispatch=False) reintroduces the pool-mode
+        # cross-lane collective-ordering deadlock — the static schedule
+        # checker flags that configuration as SCHED001.
+        lock = (self._dispatch_lock if self.serialize_dispatch
+                else contextlib.nullcontext())
+        with lock:
             cur = (bufs[seg.entry] if seg.index > 0
                    else self._prepare_input(entry))
             out = exes[seg.index](cur)
@@ -359,14 +411,51 @@ class PlanStreamExecutor:
         are valid JAX arrays whose values materialize on first use; call
         ``jax.block_until_ready`` to wait for the whole queue.  The queue
         is cleared; ``report()`` describes the run.
+
+        With ``verify="warn"`` the planned order is statically checked
+        before any segment executes and findings are emitted as warnings;
+        ``verify="strict"`` raises :class:`PlanVerificationError` instead,
+        leaving the queue intact.  ``run()`` is not reentrant — a second
+        call while one is in flight raises ``RuntimeError``; calling it
+        again after a completed run executes whatever was submitted since.
         """
         if not self._queue:
             return []
-        order = self._plan_schedule()
+        if self._running:
+            raise RuntimeError(
+                "PlanStreamExecutor.run() is already in progress; "
+                "submit() more work and call run() after it returns")
+        entries, self._queue = self._queue, []
+        # Segments are re-priced per run (fresh SegmentTask objects come
+        # from submit(), but measured_s survives a strict-verify restore),
+        # so clear any stale measurements before planning.
+        for e in entries:
+            for seg in e.segments:
+                seg.measured_s = 0.0
+        order = self._plan_schedule(entries)
+
+        if self.verify != "off":
+            report = self._check_schedule(order, entries)
+            self._last_verify = report
+            if report.errors and self.verify == "strict":
+                from ..analysis import PlanVerificationError
+                self._queue = entries        # leave the queue resubmittable
+                raise PlanVerificationError(
+                    report, context="PlanStreamExecutor.run(verify='strict')")
+            if report:
+                warnings.warn("PlanStreamExecutor schedule check:\n"
+                              + report.render(), stacklevel=2)
+
+        self._running = True
+        try:
+            return self._run_order(order, entries)
+        finally:
+            self._running = False
+
+    def _run_order(self, order: List[SegmentTask],
+                   entries: List[_Entry]) -> List[jax.Array]:
         self._last_schedule = order
         self._last_report = {"predicted": self._simulate(order)}
-
-        entries = self._queue
         exes = [self._segment_exes(e) for e in entries]
         timed = (self.mode == "timed" or self.watchdog is not None
                  or self.profile)
@@ -378,11 +467,11 @@ class PlanStreamExecutor:
                 self._step_tags[step] = seg.tag
                 if self.watchdog is not None:
                     self.watchdog.start(step)
-                t0 = time.perf_counter()
+                t0 = self.timer()
                 self._dispatch_entry_segment(entries[seg.entry], seg,
                                              exes[seg.entry], bufs)
                 jax.block_until_ready(bufs[seg.entry])
-                seg.measured_s = time.perf_counter() - t0
+                seg.measured_s = self.timer() - t0
                 if self.watchdog is not None:
                     self.watchdog.stop()
             self._last_report["measured"] = self._simulate(
@@ -396,7 +485,8 @@ class PlanStreamExecutor:
             # dispatch lock (collective launch-order consistency); overlap
             # comes from the async runtime underneath.
             pool = WorkStealingPool(self.n_streams,
-                                    cost_model=self.cost_model)
+                                    cost_model=self.cost_model,
+                                    timer=self.timer)
 
             def chain(e_idx: int):
                 entry = entries[e_idx]
@@ -419,9 +509,7 @@ class PlanStreamExecutor:
                 self._dispatch_entry_segment(entries[seg.entry], seg,
                                              exes[seg.entry], bufs)
 
-        outs = [e.out for e in entries]
-        self._queue = []
-        return outs
+        return [e.out for e in entries]
 
     # -- introspection ------------------------------------------------------
 

@@ -514,13 +514,21 @@ def n_segments(spec: PipelineSpec) -> int:
 
 def segment_in_spec(spec: PipelineSpec, index: int) -> P:
     """PartitionSpec of segment ``index``'s input (stage ``index-1`` layout;
-    segment 0 takes the pipeline input layout)."""
+    segment 0 takes the pipeline input layout).
+
+    Both boundary specs read the *declared* stage layouts, so
+    ``segment_out_spec(j) == segment_in_spec(j+1)`` holds by construction
+    and cannot detect a corrupted layout chain; the static contract
+    checker (:func:`repro.analysis.contracts.check_boundaries`) verifies
+    the same boundary independently by replaying hop ``j``'s moves.
+    """
     stages, _ = spec.stage_order()
     return P(*(spec.batch_spec + stages[max(index - 1, 0)].spec))
 
 
 def segment_out_spec(spec: PipelineSpec, index: int) -> P:
-    """PartitionSpec of segment ``index``'s output (stage ``index`` layout)."""
+    """PartitionSpec of segment ``index``'s output (stage ``index`` layout;
+    see :func:`segment_in_spec` on how boundaries are verified)."""
     stages, _ = spec.stage_order()
     return P(*(spec.batch_spec + stages[index].spec))
 

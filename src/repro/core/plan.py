@@ -64,10 +64,12 @@ class PlanCache:
     keeps working; an evicted key simply recompiles on its next miss.
     """
 
-    def __init__(self, capacity: Optional[int] = None):
+    def __init__(self, capacity: Optional[int] = None,
+                 timer: Callable[[], float] = time.perf_counter):
         self._lock = threading.Lock()
         self._plans: "OrderedDict[Hashable, PlanEntry]" = OrderedDict()
         self._capacity = capacity
+        self._timer = timer
         self.misses = 0
         self.hits = 0
         self.evictions = 0
@@ -90,9 +92,9 @@ class PlanCache:
         # Build outside the lock: compiles can take seconds and must not
         # serialize unrelated plan lookups (the paper's scheduler threads
         # share one cache).
-        t0 = time.perf_counter()
+        t0 = self._timer()
         executable = builder()
-        dt = time.perf_counter() - t0
+        dt = self._timer() - t0
         with self._lock:
             # Another thread may have raced us; first build wins.
             entry = self._plans.get(key)
@@ -108,6 +110,11 @@ class PlanCache:
                 self.hits += 1
             self._plans.move_to_end(key)
         return entry
+
+    def keys(self) -> list:
+        """Snapshot of the cached plan keys (static key audits)."""
+        with self._lock:
+            return list(self._plans)
 
     def stats(self) -> Dict[str, Any]:
         with self._lock:
@@ -408,6 +415,11 @@ class TuningCache:
             else:
                 self.hits += 1
             return plan
+
+    def keys(self) -> list:
+        """Snapshot of the wisdom keys (static key audits, warm scans)."""
+        with self._lock:
+            return list(self._plans)
 
     def put(self, key: str, plan: TunedPlan) -> None:
         with self._lock:

@@ -165,10 +165,12 @@ class WorkStealingPool:
     """Per-worker deques + owner-head/thief-tail stealing (Eq. 6 gated)."""
 
     def __init__(self, n_workers: int, *, steal: bool = True,
-                 cost_model: CostModel = CostModel()):
+                 cost_model: CostModel = CostModel(),
+                 timer: Callable[[], float] = time.perf_counter):
         self.n = n_workers
         self.steal = steal
         self.cm = cost_model
+        self.timer = timer
         self.deques = [collections.deque() for _ in range(n_workers)]
         # Running per-deque cost totals, updated on every push/pop: victim
         # selection is O(workers) instead of O(workers x queue) — idle
@@ -223,7 +225,7 @@ class WorkStealingPool:
 
     def run(self) -> Dict[str, float]:
         """Execute all submitted tasks; returns aggregate timing stats."""
-        t_start = time.perf_counter()
+        t_start = self.timer()
 
         def worker_loop(w: int):
             st = self.stats[w]
@@ -237,13 +239,13 @@ class WorkStealingPool:
                     time.sleep(1e-5)
                     continue
                 task, stolen = got
-                t0 = time.perf_counter()
+                t0 = self.timer()
                 if task.fn is not None:
                     task.fn(*task.args)
-                st.busy_s += time.perf_counter() - t0
+                st.busy_s += self.timer() - t0
                 st.tasks += 1
                 st.steals += int(stolen)
-            st.finished_at = time.perf_counter() - t_start
+            st.finished_at = self.timer() - t_start
 
         threads = [threading.Thread(target=worker_loop, args=(w,))
                    for w in range(self.n)]
@@ -251,7 +253,7 @@ class WorkStealingPool:
             th.start()
         for th in threads:
             th.join()
-        wall = time.perf_counter() - t_start
+        wall = self.timer() - t_start
         busys = [s.busy_s for s in self.stats]
         return {
             "wall_s": wall,

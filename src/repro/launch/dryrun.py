@@ -51,15 +51,15 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
     from repro.optim.adamw import AdamWConfig
     opt_cfg = AdamWConfig(moment_dtype="bfloat16" if big else "float32")
 
-    t0 = time.perf_counter()
+    t0 = time.perf_counter()  # repro-lint: disable=REP002 compile-wall reporting in a dry-run driver, not a measured path
     cell = build_cell(cfg, shape, mesh, opt_cfg=opt_cfg,
                       param_dtype=param_dtype)
     with mesh:
         lowered = cell.jitted.lower(*cell.abstract_args)
-        t_lower = time.perf_counter() - t0
-        t0 = time.perf_counter()
+        t_lower = time.perf_counter() - t0  # repro-lint: disable=REP002 compile-wall reporting in a dry-run driver, not a measured path
+        t0 = time.perf_counter()  # repro-lint: disable=REP002 compile-wall reporting in a dry-run driver, not a measured path
         compiled = lowered.compile()
-        t_compile = time.perf_counter() - t0
+        t_compile = time.perf_counter() - t0  # repro-lint: disable=REP002 compile-wall reporting in a dry-run driver, not a measured path
 
     mem = compiled.memory_analysis()
     cost = cost_analysis_dict(compiled)
@@ -166,11 +166,11 @@ def dryrun_fft(grid, decomp, *, multi_pod: bool, n_chunks: int = 1,
     arg = jax.ShapeDtypeStruct(
         tuple(batch) + tuple(grid), jnp.complex64,
         sharding=NamedSharding(mesh, spec.in_spec()))
-    t0 = time.perf_counter()
+    t0 = time.perf_counter()  # repro-lint: disable=REP002 compile-wall reporting in a dry-run driver, not a measured path
     with mesh:
         lowered = jax.jit(build_pipeline(mesh, spec)).lower(arg)
         compiled = lowered.compile()
-    t_compile = time.perf_counter() - t0
+    t_compile = time.perf_counter() - t0  # repro-lint: disable=REP002 compile-wall reporting in a dry-run driver, not a measured path
     mem = compiled.memory_analysis()
     cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()

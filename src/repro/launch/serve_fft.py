@@ -83,7 +83,7 @@ def verify_result(x, res, *, atol=1e-4):
 
 def serve_fft(*, requests=24, round_size=8, lose=3, seed=0,
               wisdom=None, json_path=None, check=False,
-              hit_rate_min=0.8, verbose=True):
+              hit_rate_min=0.8, verify="off", verbose=True):
     rng = np.random.default_rng(seed)
     mesh = make_mesh(dims=PRIMARY_GRID + SECONDARY_GRID)
     cache = TuningCache(path=wisdom)
@@ -91,7 +91,7 @@ def serve_fft(*, requests=24, round_size=8, lose=3, seed=0,
     tune(PRIMARY_GRID, mesh, mode="auto", cache=cache)
 
     svc = FFTService(mesh, tune_cache=cache, bucket_edges=SMOKE_EDGES,
-                     max_batch=4)
+                     max_batch=4, verify=verify)
     rep = svc.warm(ensure=[(SECONDARY_GRID, ("fft", "fft"))])
     if verbose:
         print(f"[serve_fft] mesh={tuple(mesh.devices.shape)} "
@@ -103,7 +103,7 @@ def serve_fft(*, requests=24, round_size=8, lose=3, seed=0,
     lost = False
     lose_at_round = max(1, (requests // round_size) // 2) if lose else -1
     errors = []
-    t0 = time.perf_counter()
+    t0 = time.perf_counter()  # repro-lint: disable=REP002 driver wall-clock for the metrics report, not a measured path
     for r, lo in enumerate(range(0, len(grids), round_size)):
         round_grids = grids[lo:lo + round_size]
         for g in round_grids:
@@ -133,7 +133,7 @@ def serve_fft(*, requests=24, round_size=8, lose=3, seed=0,
                   f"(hit_rate={svc.metrics.plan_hit_rate:.2f}, "
                   f"p50={lat['p50_s'] * 1e3:.1f}ms, "
                   f"degraded={svc.degraded})", flush=True)
-    wall = time.perf_counter() - t0
+    wall = time.perf_counter() - t0  # repro-lint: disable=REP002 driver wall-clock for the metrics report, not a measured path
 
     # Fresh-mesh reference: a service booted directly on an identical
     # survivors-only mesh must reproduce the recovered service's post-loss
@@ -216,11 +216,15 @@ def main(argv=None):
     ap.add_argument("--check", action="store_true",
                     help="gate on hit rate + bitwise parity; exit non-zero")
     ap.add_argument("--hit-rate-min", type=float, default=0.8)
+    ap.add_argument("--verify", choices=("off", "warn", "strict"),
+                    default="off",
+                    help="statically check every drain's planned segment "
+                         "order before dispatch (strict: raise on findings)")
     args = ap.parse_args(argv)
     serve_fft(requests=args.requests, round_size=args.round_size,
               lose=args.lose, seed=args.seed, wisdom=args.wisdom,
               json_path=args.json, check=args.check,
-              hit_rate_min=args.hit_rate_min)
+              hit_rate_min=args.hit_rate_min, verify=args.verify)
 
 
 if __name__ == "__main__":

@@ -29,7 +29,7 @@ globally monotonic through a failover (the same convention
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -49,14 +49,20 @@ class FFTService:
                  bucket_edges: Sequence[int] = DEFAULT_BUCKET_EDGES,
                  max_batch: int = 8, watchdog: Optional[StepWatchdog] = None,
                  watchdog_tolerance: float = 4.0,
-                 metrics: Optional[ServingMetrics] = None):
+                 metrics: Optional[ServingMetrics] = None,
+                 verify: str = "off",
+                 timer: Callable[[], float] = time.perf_counter):
         self.tune_cache = tune_cache
         self.metrics = metrics if metrics is not None else ServingMetrics()
         self.watchdog = (watchdog if watchdog is not None
                          else StepWatchdog(tolerance=watchdog_tolerance))
+        self.timer = timer
         # ONE executor for the service lifetime (it is not mesh-bound);
         # watchdog= implies timed dispatch, so every segment is measured.
-        self.executor = PlanStreamExecutor(watchdog=self.watchdog)
+        # verify= is forwarded: every drain's planned segment order passes
+        # the static schedule checker before anything launches.
+        self.executor = PlanStreamExecutor(watchdog=self.watchdog,
+                                           verify=verify, timer=timer)
         self._bucket_edges = tuple(bucket_edges)
         self._max_batch = max_batch
         self.degraded = False
@@ -116,7 +122,7 @@ class FFTService:
         outs = self.executor.run()
         jax.block_until_ready(outs)
         self.metrics.record_stragglers(len(self.watchdog.flagged))
-        now = time.perf_counter()
+        now = self.timer()
         results: Dict[int, FFTResult] = {}
         for rb, y in zip(routed, outs):
             for i, member in enumerate(rb.members):

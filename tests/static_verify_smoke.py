@@ -1,0 +1,119 @@
+"""CI smoke for the static verifier (CI, not pytest).
+
+Runs on the fake 8-device mesh this process forces before jax init:
+
+1. a mixed heterogeneous 2-D/3-D executor queue plans and executes under
+   ``verify="strict"`` — the default async path must verify clean and
+   every output must stay bitwise equal to its solo execution;
+2. the two seeded hazards from the acceptance criteria are flagged
+   **without executing a single segment**: pool-mode dispatch with the
+   dispatch lock disabled (SCHED001 — the PR 7 deadlock class) and a
+   cross-entry use-after-donate (DON001);
+3. every plan in the queue passes the sharding-contract checker
+   (``check_plan``), and the combined diagnostic stream is dumped as a
+   JSON artifact (``--json PATH``).
+
+Run directly: ``PYTHONPATH=src python tests/static_verify_smoke.py
+--json /tmp/diag.json`` (the name does not match ``test_*`` on purpose —
+pytest must not collect it).
+"""
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the combined diagnostics stream here")
+    args = ap.parse_args(argv)
+
+    import jax.numpy as jnp
+
+    from repro.analysis import PlanVerificationError, check_plan
+    from repro.compat import AxisType, make_mesh
+    from repro.core import PlanStreamExecutor, plan_fft
+
+    mesh = make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    rng = np.random.default_rng(0)
+
+    def cx(shape):
+        return jnp.asarray((rng.standard_normal(shape)
+                            + 1j * rng.standard_normal(shape)
+                            ).astype(np.complex64))
+
+    p2d = plan_fft(mesh, (16, 16), batch_shape=(4,))
+    p3d = plan_fft(mesh, (8, 8, 16))
+    queue = [(p2d, cx((4, 16, 16))), (p3d, cx((8, 8, 16))),
+             (p2d, cx((4, 16, 16)))]
+    diagnostics = []
+
+    # 1. contract check every plan (both directions + key audit)
+    for plan in (p2d, p3d):
+        rep = check_plan(plan, include_global=True)
+        diagnostics += [d.to_dict() for d in rep]
+        assert not rep.errors, f"contract findings:\n{rep.render()}"
+    print("[static_verify] contracts clean over 2 plans", flush=True)
+
+    # 2. strict verify on the live mixed queue, then execute: bitwise parity
+    ex = PlanStreamExecutor(verify="strict")
+    for plan, x in queue:
+        ex.submit(plan, x)
+    pre = ex.verify_schedule()
+    diagnostics += [d.to_dict() for d in pre]
+    assert not len(pre), f"schedule findings:\n{pre.render()}"
+    outs = ex.run()
+    for (plan, x), y in zip(queue, outs):
+        solo = plan(x)
+        assert np.array_equal(np.asarray(y), np.asarray(solo)), \
+            "verified queue diverged from solo execution"
+    print(f"[static_verify] strict-verified mixed queue of {len(queue)}: "
+          f"bitwise parity with solo", flush=True)
+
+    # 3. seeded hazards must be caught statically (nothing dispatches)
+    bad = PlanStreamExecutor(mode="pool", serialize_dispatch=False,
+                             verify="strict")
+    for plan, x in queue:
+        bad.submit(plan, x)
+    try:
+        bad.run()
+        raise SystemExit("[static_verify] FAIL: seeded pool deadlock "
+                         "not flagged")
+    except PlanVerificationError as e:
+        assert "SCHED001" in e.report.codes()
+        diagnostics += [d.to_dict() for d in e.report]
+    assert len(bad) == len(queue), "strict verify consumed the queue"
+
+    don = PlanStreamExecutor(mode="pool", verify="strict")
+    shared_x = cx((4, 16, 16))
+    don.submit(p2d, shared_x, donate=True)
+    don.submit(p2d, shared_x)
+    try:
+        don.run()
+        raise SystemExit("[static_verify] FAIL: seeded donation hazard "
+                         "not flagged")
+    except PlanVerificationError as e:
+        assert "DON001" in e.report.codes()
+        diagnostics += [d.to_dict() for d in e.report]
+    print("[static_verify] seeded SCHED001 + DON001 both flagged "
+          "statically (no segment executed)", flush=True)
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump({"count": len(diagnostics),
+                       "diagnostics": diagnostics}, f, indent=1)
+            f.write("\n")
+        print(f"[static_verify] diagnostics -> {args.json}", flush=True)
+    print("[static_verify] OK", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,520 @@
+"""Static verifier: schedule model-checking, contract checks, repro-lint.
+
+Everything in this module is *static*: the schedule checker consumes a
+planned dispatch order (``_plan_schedule`` prices and orders without
+launching), the contract checker replays hop moves over declared stage
+layouts, and the linter parses source text.  The two seeded acceptance
+scenarios — the PR 7 pool-mode collective-ordering deadlock with the
+dispatch lock disabled, and a cross-entry use-after-donate — must be
+flagged without executing a single segment.
+"""
+import dataclasses as dc
+
+import numpy as np
+import pytest
+
+
+def _cx(rng, shape):
+    import jax.numpy as jnp
+    return jnp.asarray((rng.standard_normal(shape)
+                        + 1j * rng.standard_normal(shape)
+                        ).astype(np.complex64))
+
+
+def _two_plan_queue(cpu_mesh):
+    """Two heterogeneous multi-stage plans (each has collective segments)."""
+    from repro.core import plan_fft
+    rng = np.random.default_rng(0)
+    p2d = plan_fft(cpu_mesh, (8, 8))
+    p3d = plan_fft(cpu_mesh, (4, 4, 8))
+    return [(p2d, _cx(rng, (8, 8))), (p3d, _cx(rng, (4, 4, 8)))]
+
+
+# ---------------------------------------------------------------------------
+# Diagnostics plumbing
+# ---------------------------------------------------------------------------
+
+def test_diagnostic_report_json_and_rendering():
+    from repro.analysis import Diagnostic, DiagnosticReport
+    rep = DiagnosticReport()
+    assert not rep and len(rep) == 0
+    rep.add(Diagnostic(code="CON001", severity="error", message="boom",
+                       hint="fix it", plan_key="p"))
+    rep.add(Diagnostic(code="CON005", severity="warning", message="meh"))
+    assert len(rep) == 2 and len(rep.errors) == 1
+    assert list(rep.codes()) == ["CON001", "CON005"]
+    text = rep.render()
+    assert "CON001" in text and "fix it" in text
+    import json
+    payload = json.loads(rep.to_json())
+    assert payload["count"] == 2 and payload["errors"] == 1
+    assert payload["diagnostics"][0]["code"] == "CON001"
+    with pytest.raises(ValueError, match="severity"):
+        Diagnostic(code="X", severity="fatal", message="no such level")
+
+
+# ---------------------------------------------------------------------------
+# Schedule checker: interleaving model
+# ---------------------------------------------------------------------------
+
+def test_interleaving_count_matches_enumeration():
+    from repro.analysis.schedule_check import (count_interleavings,
+                                               enumerate_interleavings)
+    chains = [["a0", "a1"], ["b0"], ["c0", "c1", "c2"]]
+    inters = list(enumerate_interleavings(chains))
+    assert len(inters) == count_interleavings(chains) == 60
+    assert len(set(inters)) == 60
+    for inter in inters:       # every merge preserves each chain's order
+        for c in chains:
+            pos = [inter.index(s) for s in c]
+            assert pos == sorted(pos)
+
+
+def test_racy_pairs_exhaustive_equals_pairwise_rule():
+    from repro.analysis.schedule_check import racy_collective_pairs
+    chains = [["a0", "a1"], ["b0", "b1"]]
+    exhaustive = racy_collective_pairs(chains, cap=5000)
+    pairwise = racy_collective_pairs(chains, cap=0)   # force the fallback
+    assert exhaustive == pairwise
+    # same-chain elements are ordered in every interleaving: never racy
+    assert ("a0", "a1") not in exhaustive
+    assert ("a0", "b0") in exhaustive
+    assert racy_collective_pairs([["a0", "a1"]]) == []
+
+
+# ---------------------------------------------------------------------------
+# Schedule checker: seeded hazards, caught without executing anything
+# ---------------------------------------------------------------------------
+
+def test_seeded_pool_deadlock_flagged_statically(cpu_mesh):
+    """The PR 7 bug, reintroduced on purpose: pool dispatch with the
+    dispatch lock disabled.  The checker must flag the reachable
+    cross-lane collective orderings before anything launches."""
+    from repro.analysis import PlanVerificationError
+    from repro.core import PlanStreamExecutor
+    ex = PlanStreamExecutor(mode="pool", serialize_dispatch=False,
+                            verify="strict")
+    for plan, x in _two_plan_queue(cpu_mesh):
+        ex.submit(plan, x)
+    report = ex.verify_schedule()          # static: queue not consumed
+    assert "SCHED001" in report.codes()
+    assert len(ex) == 2
+    with pytest.raises(PlanVerificationError, match="SCHED001"):
+        ex.run()
+    # strict verify failed the run *before* dispatch: queue intact,
+    # nothing executed.
+    assert len(ex) == 2
+    assert all(e.out is None for e in ex._queue)
+    # The verified invariant: the same queue with the dispatch lock held
+    # (the default) has no reachable cross-order interleaving.
+    ex2 = PlanStreamExecutor(mode="pool", serialize_dispatch=True)
+    for plan, x in _two_plan_queue(cpu_mesh):
+        ex2.submit(plan, x)
+    assert "SCHED001" not in ex2.verify_schedule().codes()
+
+
+def test_seeded_cross_entry_donation_hazard(cpu_mesh):
+    """One buffer donated by one entry and read by another: every pool
+    interleaving that runs the donor's segment 0 first invalidates the
+    reader's input.  Flagged statically."""
+    from repro.core import PlanStreamExecutor, plan_fft
+    plan = plan_fft(cpu_mesh, (8, 8))
+    x = _cx(np.random.default_rng(1), (8, 8))
+    ex = PlanStreamExecutor(mode="pool")
+    ex.submit(plan, x, donate=True)
+    ex.submit(plan, x)
+    report = ex.verify_schedule()
+    assert "DON001" in report.codes()
+    assert len(ex) == 2                    # nothing consumed, nothing ran
+
+
+def test_async_donation_hazard_depends_on_dispatch_order(cpu_mesh):
+    """In async mode dispatch is a total order: donor-after-reader is
+    safe, donor-before-reader is not."""
+    from repro.analysis import check_schedule
+    from repro.core import PlanStreamExecutor, plan_fft
+    plan = plan_fft(cpu_mesh, (8, 8))
+    x = _cx(np.random.default_rng(1), (8, 8))
+
+    ex = PlanStreamExecutor(n_streams=1)
+    ex.submit(plan, x)                     # reader first
+    ex.submit(plan, x, donate=True)
+    order = ex._plan_schedule()
+    assert "DON001" not in check_schedule(order, ex._queue,
+                                          mode="async").codes()
+    # same queue, donor first
+    ex2 = PlanStreamExecutor(n_streams=1)
+    ex2.submit(plan, x, donate=True)
+    ex2.submit(plan, x)
+    order2 = ex2._plan_schedule()
+    assert "DON001" in check_schedule(order2, ex2._queue,
+                                      mode="async").codes()
+
+
+def test_shared_plan_donation_and_double_donation(cpu_mesh):
+    from repro.analysis import check_schedule
+    from repro.core import PlanStreamExecutor, plan_fft
+    plan = plan_fft(cpu_mesh, (8, 8))
+    x = _cx(np.random.default_rng(2), (8, 8))
+    ex = PlanStreamExecutor()
+    ex.submit(plan, x, donate=True)
+    ex.submit(plan, _cx(np.random.default_rng(3), (8, 8)))
+    plan.shared = True          # flipped after submit: only verify sees it
+    try:
+        report = check_schedule(ex._plan_schedule(), ex._queue)
+        assert "DON002" in report.codes()
+    finally:
+        plan.shared = False     # session-scoped fixture: leave no residue
+    # double donation of one buffer is wrong in every interleaving
+    ex2 = PlanStreamExecutor()
+    ex2.submit(plan, x, donate=True)
+    ex2.submit(plan, x, donate=True)
+    report2 = check_schedule(ex2._plan_schedule(), ex2._queue)
+    assert "ALIAS001" in report2.codes()
+
+
+def test_segment_order_violation_detected(cpu_mesh):
+    from repro.analysis import check_schedule
+    from repro.core import PlanStreamExecutor
+    ex = PlanStreamExecutor()
+    for plan, x in _two_plan_queue(cpu_mesh):
+        ex.submit(plan, x)
+    order = ex._plan_schedule()
+    assert not check_schedule(order, ex._queue).errors   # sane order: clean
+    report = check_schedule(list(reversed(order)), ex._queue)
+    assert "SCHED002" in report.codes()
+
+
+def test_clean_queue_runs_under_strict_verify(cpu_mesh):
+    """The default async path verifies clean and still executes bitwise
+    like solo plan(x) — strict verify is free on correct queues."""
+    import jax.numpy as jnp
+    from repro.core import PlanStreamExecutor
+    queue = _two_plan_queue(cpu_mesh)
+    ex = PlanStreamExecutor(verify="strict")
+    for plan, x in queue:
+        ex.submit(plan, x)
+    outs = ex.run()
+    assert len(outs) == len(queue)
+    for (plan, x), y in zip(queue, outs):
+        np.testing.assert_array_equal(np.asarray(y),
+                                      np.asarray(plan(x)))
+    assert ex._last_verify is not None and not len(ex._last_verify)
+    assert jnp.ndim(outs[0]) == 2
+
+
+def test_run_twice_is_safe(cpu_mesh):
+    """Regression: run() used to leave the queue (and mutated
+    measured_s / schedule state) behind; a second run() must execute
+    newly submitted work only, and an empty re-run is a no-op."""
+    from repro.core import PlanStreamExecutor, plan_fft
+    plan = plan_fft(cpu_mesh, (8, 8))
+    rng = np.random.default_rng(4)
+    ex = PlanStreamExecutor(mode="timed", profile=True)
+    x1 = _cx(rng, (8, 8))
+    ex.submit(plan, x1)
+    out1 = ex.run()
+    assert len(out1) == 1 and len(ex) == 0
+    assert ex.run() == []                  # drained: no stale re-execution
+    x2 = _cx(rng, (8, 8))
+    ex.submit(plan, x2)
+    out2 = ex.run()                        # fresh entry only
+    assert len(out2) == 1
+    np.testing.assert_array_equal(np.asarray(out2[0]),
+                                  np.asarray(plan(x2)))
+
+
+# ---------------------------------------------------------------------------
+# Contract checker
+# ---------------------------------------------------------------------------
+
+def test_clean_plan_verifies_with_no_findings(cpu_mesh):
+    from repro.analysis import check_plan
+    from repro.core import plan_fft
+    plan = plan_fft(cpu_mesh, (8, 8, 8), precompiled=False)
+    assert len(check_plan(plan)) == 0
+    report = plan.verify()
+    assert len(report) == 0 and plan.verified is True
+    assert "contracts clean" in plan.describe()
+
+
+def test_corrupted_boundary_spec_is_flagged(cpu_mesh):
+    """Swap one interior stage's layout for a self-consistent but wrong
+    one: the declared specs still satisfy StageLayout's invariants, so
+    only an independent hop replay can catch it."""
+    from repro.analysis.contracts import check_pipeline
+    from repro.core import plan_fft
+    from repro.core.decomp import StageLayout
+    plan = plan_fft(cpu_mesh, (8, 8, 8), precompiled=False)
+    spec = plan.pipeline_spec()
+    stages = list(spec.decomp.stages)
+    good = stages[1]            # e.g. ('data', None, 'model'), fft (1,)
+    swapped = tuple(reversed([e for i, e in enumerate(good.spec)
+                              if i not in good.fft_dims]))
+    bad_spec = list(good.spec)
+    j = 0
+    for i in range(len(bad_spec)):
+        if i not in good.fft_dims:
+            bad_spec[i] = swapped[j]
+            j += 1
+    stages[1] = StageLayout(spec=tuple(bad_spec), fft_dims=good.fft_dims)
+    bad = dc.replace(spec,
+                     decomp=dc.replace(spec.decomp, stages=tuple(stages)))
+    axis_sizes = dict(zip(cpu_mesh.axis_names, cpu_mesh.devices.shape))
+    report = check_pipeline(bad, axis_sizes, label="corrupt")
+    assert "CON001" in report.codes() and report.errors
+
+
+def test_non_dividing_chunk_schedule_is_flagged(cpu_mesh):
+    from repro.analysis.contracts import check_pipeline
+    from repro.core import plan_fft
+    plan = plan_fft(cpu_mesh, (8, 8, 8), precompiled=False)
+    spec = plan.pipeline_spec()
+    axis_sizes = dict(zip(cpu_mesh.axis_names, cpu_mesh.devices.shape))
+    # 3 does not divide the hop's local block of 8
+    bad = dc.replace(spec, chunk_schedule=(3,) + spec.chunk_schedule[1:])
+    assert "CON002" in check_pipeline(bad, axis_sizes,
+                                      label="chunk").codes()
+    # wrong-length schedule
+    short = dc.replace(spec, chunk_schedule=spec.chunk_schedule[:-1])
+    assert "CON002" in check_pipeline(short, axis_sizes,
+                                      label="len").codes()
+    # non-positive entry
+    neg = dc.replace(spec, chunk_schedule=(0,) + spec.chunk_schedule[1:])
+    assert "CON002" in check_pipeline(neg, axis_sizes,
+                                      label="neg").codes()
+
+
+def test_indivisible_grid_is_flagged(cpu_mesh):
+    from repro.analysis.contracts import check_pipeline
+    from repro.core import plan_fft
+    plan = plan_fft(cpu_mesh, (8, 8, 8), precompiled=False)
+    spec = plan.pipeline_spec()
+    axis_sizes = dict(zip(cpu_mesh.axis_names, cpu_mesh.devices.shape))
+    axis_sizes["model"] = 3     # what-if: 3 does not divide any grid dim
+    report = check_pipeline(spec, axis_sizes, label="grid")
+    assert "CON003" in report.codes()
+
+
+def test_colliding_plan_keys_are_flagged(cpu_mesh):
+    """Alias the inverse spec onto the forward one: both directions now
+    compile under identical GLOBAL_PLAN_CACHE keys."""
+    from repro.analysis import check_plan
+    from repro.core import plan_fft
+    plan = plan_fft(cpu_mesh, (8, 8), precompiled=False)
+    object.__setattr__(plan, "_inv_spec", plan._fwd_spec)
+    report = check_plan(plan)
+    assert "CON004" in report.codes()
+    assert plan.verify().errors and plan.verified is False
+    assert "FINDINGS" in plan.describe()
+
+
+def test_wisdom_key_audit():
+    """Two key strings parsing to one problem split its wisdom; an
+    unparseable key is a warning (warm-start skips it)."""
+    from repro.analysis import audit_plan_keys
+    from repro.core.plan import tuning_key
+
+    k = tuning_key(grid=(16, 16), mesh_shape=(2, 4),
+                   mesh_axes=("data", "model"), kinds=("fft", "fft"),
+                   dtype="complex64", inverse=False)
+    reordered = ";".join(reversed(k.split(";")))
+
+    class StubCache:
+        def keys(self):
+            return [k, reordered, "not-a-wisdom-key"]
+
+    report = audit_plan_keys(tune_cache=StubCache(), include_global=False)
+    assert "CON004" in report.codes() and "CON005" in report.codes()
+    assert len(report.errors) == 1     # only the collision is an error
+
+
+def test_plan_fft_validate_modes(cpu_mesh):
+    from repro.core import plan_fft
+    plan = plan_fft(cpu_mesh, (8, 8), precompiled=False, validate="strict")
+    assert plan.verified is True
+    with pytest.raises(ValueError, match="validate"):
+        plan_fft(cpu_mesh, (8, 8), validate="paranoid")
+
+
+# ---------------------------------------------------------------------------
+# dim_groups early validation (satellite)
+# ---------------------------------------------------------------------------
+
+def test_dim_groups_validation_errors(cpu_mesh):
+    from repro.core import plan_fft
+    grid = (4, 4, 8)
+    with pytest.raises(ValueError, match="repeat dim"):
+        plan_fft(cpu_mesh, grid, dim_groups=[[0, 1], [1, 2]])
+    with pytest.raises(ValueError, match="missing \\[2\\]"):
+        plan_fft(cpu_mesh, grid, dim_groups=[[0], [1]])
+    with pytest.raises(ValueError, match="out of range"):
+        plan_fft(cpu_mesh, grid, dim_groups=[[0, 1], [2, 3]])
+    with pytest.raises(ValueError, match="contiguous"):
+        plan_fft(cpu_mesh, grid, dim_groups=[[1], [0], [2]])
+    with pytest.raises(ValueError, match="non-empty"):
+        plan_fft(cpu_mesh, grid, dim_groups=[[0, 1, 2], []])
+    # a valid grouping still plans
+    plan = plan_fft(cpu_mesh, grid, dim_groups=[[0, 1], [2]],
+                    precompiled=False)
+    assert plan.pipeline_spec().decomp.dim_groups == ((0, 1), (2,))
+
+
+# ---------------------------------------------------------------------------
+# Repro-lint
+# ---------------------------------------------------------------------------
+
+def _codes(report):
+    return [d.code for d in report]
+
+
+def test_rep001_versioned_jax_api_outside_compat():
+    from repro.analysis.lint import lint_source
+    src = ("from jax.experimental.shard_map import shard_map\n"
+           "import jax\n"
+           "m = jax.make_mesh((2,), ('x',))\n")
+    assert _codes(lint_source(src, "src/repro/core/foo.py")).count(
+        "REP001") == 2
+    # the same source *inside* the compat shim is the one allowed home
+    assert "REP001" not in _codes(lint_source(src, "src/repro/compat.py"))
+
+
+def test_rep001_cost_analysis_call():
+    from repro.analysis.lint import lint_source
+    src = "def f(compiled):\n    return compiled.cost_analysis()\n"
+    assert "REP001" in _codes(lint_source(src, "src/repro/x.py"))
+
+
+def test_rep002_wall_clock_requires_injectable_timer():
+    from repro.analysis.lint import lint_source
+    bare = ("import time\n"
+            "def measure():\n"
+            "    t0 = time.perf_counter()\n"
+            "    return time.perf_counter() - t0\n")
+    assert _codes(lint_source(bare, "src/repro/m.py")).count("REP002") == 2
+    injectable = ("import time\n"
+                  "def measure(timer=time.perf_counter):\n"
+                  "    t0 = time.perf_counter()\n"
+                  "    return time.perf_counter() - t0\n")
+    assert "REP002" not in _codes(lint_source(injectable, "src/repro/m.py"))
+    # a class whose __init__ takes timer= covers its methods
+    cls = ("import time\n"
+           "class M:\n"
+           "    def __init__(self, timer=time.perf_counter):\n"
+           "        self.timer = timer\n"
+           "    def measure(self):\n"
+           "        return time.perf_counter()\n")
+    assert "REP002" not in _codes(lint_source(cls, "src/repro/m.py"))
+    # time.time() is a timestamp clock, not a measurement hazard
+    ts = "import time\ndef f():\n    return time.time()\n"
+    assert "REP002" not in _codes(lint_source(ts, "src/repro/m.py"))
+
+
+def test_rep003_wisdom_write_outside_locked_path():
+    from repro.analysis.lint import lint_source
+    src = ("def dump(d):\n"
+           "    with open('wisdom.json', 'w') as f:\n"
+           "        f.write(d)\n")
+    assert "REP003" in _codes(lint_source(src, "src/repro/core/x.py"))
+    # plan.py owns the fcntl-locked writer
+    assert "REP003" not in _codes(lint_source(src, "src/repro/core/plan.py"))
+    # reading wisdom is fine anywhere
+    rd = "def load():\n    return open('tuning.json').read()\n"
+    assert "REP003" not in _codes(lint_source(rd, "src/repro/core/x.py"))
+
+
+def test_rep004_unbounded_module_cache():
+    from repro.analysis.lint import lint_source
+    src = "_PLAN_CACHE = {}\n"
+    assert "REP004" in _codes(lint_source(src, "src/repro/c.py"))
+    evicting = ("_PLAN_CACHE = {}\n"
+                "def put(k, v):\n"
+                "    if len(_PLAN_CACHE) > 64:\n"
+                "        _PLAN_CACHE.popitem()\n"
+                "    _PLAN_CACHE[k] = v\n")
+    assert "REP004" not in _codes(lint_source(evicting, "src/repro/c.py"))
+    plain = "_TABLE = {}\n"        # not cache-named: out of scope
+    assert "REP004" not in _codes(lint_source(plain, "src/repro/c.py"))
+
+
+def test_rep005_side_effect_inside_shard_map_body():
+    from repro.analysis.lint import lint_source
+    src = ("from repro.compat import shard_map\n"
+           "def body(x):\n"
+           "    print('trace-time spam')\n"
+           "    return x\n"
+           "def run(mesh, x):\n"
+           "    return shard_map(body, mesh=mesh)(x)\n")
+    assert "REP005" in _codes(lint_source(src, "src/repro/k.py"))
+    pure = ("from repro.compat import shard_map\n"
+            "def body(x):\n"
+            "    return x * 2\n"
+            "def run(mesh, x):\n"
+            "    return shard_map(body, mesh=mesh)(x)\n")
+    assert "REP005" not in _codes(lint_source(pure, "src/repro/k.py"))
+
+
+def test_suppression_needs_a_reason():
+    from repro.analysis.lint import lint_source
+    with_reason = ("import time\n"
+                   "def f():\n"
+                   "    return time.perf_counter()"
+                   "  # repro-lint: disable=REP002 driver wall-clock\n")
+    assert "REP002" not in _codes(lint_source(with_reason, "src/repro/d.py"))
+    bare = ("import time\n"
+            "def f():\n"
+            "    return time.perf_counter()  # repro-lint: disable=REP002\n")
+    assert "REP002" in _codes(lint_source(bare, "src/repro/d.py"))
+
+
+def test_rep000_syntax_error_and_cli(tmp_path):
+    from repro.analysis.lint import lint_source, main
+    assert "REP000" in _codes(lint_source("def f(:\n", "src/repro/b.py"))
+    # CLI: findings -> exit 1 + JSON artifact; clean tree -> exit 0
+    bad = tmp_path / "bad.py"
+    bad.write_text("import time\ndef f():\n    return time.perf_counter()\n")
+    out = tmp_path / "diag.json"
+    rc = main([str(bad), "--json", str(out)])
+    assert rc == 1
+    import json
+    payload = json.loads(out.read_text())
+    assert payload["count"] >= 1
+    assert any(d["code"] == "REP002" for d in payload["diagnostics"])
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    assert main([str(clean)]) == 0
+
+
+def test_lint_src_tree_is_clean():
+    """The satellite: the shipped tree has zero true REP00x findings
+    (suppressions carry inline reasons)."""
+    import os
+
+    from repro.analysis.lint import lint_paths
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    report = lint_paths([src])
+    assert len(report) == 0, "\n" + report.render()
+
+
+# ---------------------------------------------------------------------------
+# Serving integration: verify= threads through FFTService
+# ---------------------------------------------------------------------------
+
+def test_service_strict_verify_smoke(cpu_mesh):
+    """A warmed drain under verify='strict' completes (the serving queue
+    is hazard-free by construction) and the executor records the check."""
+    import jax.numpy as jnp
+
+    from repro.serving import FFTService
+    svc = FFTService(cpu_mesh, bucket_edges=(8, 16), verify="strict")
+    rng = np.random.default_rng(5)
+    x = (rng.standard_normal((8, 8))
+         + 1j * rng.standard_normal((8, 8))).astype(np.complex64)
+    rid = svc.submit(jnp.asarray(x))
+    results = svc.drain()
+    ref = np.fft.fftn(x)
+    scale = max(float(np.max(np.abs(ref))), 1e-30)
+    assert float(np.max(np.abs(np.asarray(results[rid].y) - ref))) / scale \
+        < 1e-4
+    assert svc.executor._last_verify is not None
+    assert not len(svc.executor._last_verify)
