@@ -17,17 +17,18 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(row, flush=True)
 
 
-def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2,
+            timer: Callable[[], float] = time.perf_counter) -> float:
     """Median wall seconds per call (jax arrays blocked on)."""
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
     ts = []
     for _ in range(iters):
-        t0 = time.perf_counter()
+        t0 = timer()
         out = fn(*args)
         jax.block_until_ready(out)
-        ts.append(time.perf_counter() - t0)
+        ts.append(timer() - t0)
     return float(np.median(ts))
 
 

@@ -19,13 +19,14 @@ from .common import calibrate_cpu_fft_rate, emit
 import dataclasses
 
 
-def measure_tau_s(n_tasks: int = 512) -> float:
+def measure_tau_s(n_tasks: int = 512,
+                  timer=time.perf_counter) -> float:
     pool = WorkStealingPool(4, steal=True)
     for i in range(n_tasks):
         pool.submit(TaskSpec(fn=lambda: None, home=i % 4, cost=1e-6))
-    t0 = time.perf_counter()
+    t0 = timer()
     pool.run()
-    return (time.perf_counter() - t0) / n_tasks
+    return (timer() - t0) / n_tasks
 
 
 def factor2(r):

@@ -120,15 +120,15 @@ def _mixed_queue(mesh, batch: int, n2: int, n3: int, backend: str):
             + [(p3d, cx((n3, n3, n3)))])
 
 
-def _best_wall(fn, iters: int) -> float:
+def _best_wall(fn, iters: int, timer=time.perf_counter) -> float:
     """Best-of-N wall seconds — the same noise filter ``tuner_table``'s
     rows use (wall-time noise is one-sided on a shared host; the min is
     the stable estimator the 20% delta gate needs)."""
     ts = []
     for _ in range(iters):
-        t0 = time.perf_counter()
+        t0 = timer()
         fn()
-        ts.append(time.perf_counter() - t0)
+        ts.append(timer() - t0)
     return float(min(ts))
 
 

@@ -70,17 +70,19 @@ def _clear_process_caches():
     clear_plan_memo()
 
 
-def _run_traffic(svc, rng, n, *, round_size=ROUND):
+def _run_traffic(svc, rng, n, *, round_size=ROUND,
+                 timer=time.perf_counter):
     grids = gen_traffic(rng, n)
-    t0 = time.perf_counter()
+    t0 = timer()
     for lo in range(0, len(grids), round_size):
         for g in grids[lo:lo + round_size]:
             svc.submit(jnp.asarray(operand(rng, g)))
         svc.drain()
-    return time.perf_counter() - t0
+    return timer() - t0
 
 
-def run(requests: int = REQUESTS, lose: int = LOSE) -> dict:
+def run(requests: int = REQUESTS, lose: int = LOSE,
+        timer=time.perf_counter) -> dict:
     mesh = make_mesh(dims=PRIMARY_GRID + SECONDARY_GRID)
     cache = TuningCache(path=None)
     tune(PRIMARY_GRID, mesh, mode="auto", cache=cache)
@@ -92,23 +94,26 @@ def run(requests: int = REQUESTS, lose: int = LOSE) -> dict:
     cold = FFTService(mesh, bucket_edges=SMOKE_EDGES, max_batch=4)
     cold.submit(jnp.asarray(operand(rng, PRIMARY_GRID)))
     misses0 = GLOBAL_PLAN_CACHE.stats()["misses"]
-    t0 = time.perf_counter()
+    t0 = timer()
     cold.drain()
-    cold_first = time.perf_counter() - t0
+    cold_first = timer() - t0
     cold_compiles = GLOBAL_PLAN_CACHE.stats()["misses"] - misses0
 
     # Warm row: same first drain, but PlanWarmer spent the compiles at
-    # startup (warm_s, reported separately).
+    # startup (warm_s, reported separately).  verify="warn" is the
+    # production posture this bench records: every drain's planned
+    # schedule is statically checked and findings land in ServingMetrics
+    # as per-code counters (the verify_warnings row).
     _clear_process_caches()
     rng = np.random.default_rng(0)
     svc = FFTService(mesh, tune_cache=cache, bucket_edges=SMOKE_EDGES,
-                     max_batch=4)
+                     max_batch=4, verify="warn")
     rep = svc.warm(ensure=[(SECONDARY_GRID, ("fft", "fft"))])
     svc.submit(jnp.asarray(operand(rng, PRIMARY_GRID)))
     misses0 = GLOBAL_PLAN_CACHE.stats()["misses"]
-    t0 = time.perf_counter()
+    t0 = timer()
     svc.drain()
-    warm_first = time.perf_counter() - t0
+    warm_first = timer() - t0
     warm_compiles = GLOBAL_PLAN_CACHE.stats()["misses"] - misses0
 
     # Steady state, then a mid-stream device loss; same service carries on.
@@ -132,6 +137,7 @@ def run(requests: int = REQUESTS, lose: int = LOSE) -> dict:
         "warmed_plans": rep.warmed,
         "warmed_batch_plans": rep.batch_plans,
         "stragglers_flagged": svc.metrics.straggler_count,
+        "verify_warnings": dict(svc.metrics.verify_findings),
         "degraded_mesh": list(svc.mesh.devices.shape),
     }
     row["degraded_ratio"] = round(row["degraded_rps"]
@@ -145,6 +151,11 @@ def run(requests: int = REQUESTS, lose: int = LOSE) -> dict:
     emit("serve_warm_first_drain", warm_first * 1e6,
          f"cold={cold_first * 1e6:.0f}us speedup={row['warm_speedup']}x "
          f"compiles={warm_compiles}(warm)/{cold_compiles}(cold)")
+    n_warn = sum(row["verify_warnings"].values())
+    emit("serve_verify_warnings", float(n_warn),
+         ("codes=" + ",".join(f"{c}:{n}" for c, n in
+                              sorted(row["verify_warnings"].items()))
+          if n_warn else "clean (every drain strict-checkable)"))
     return {
         "machine": {
             "platform": jax.default_backend(),

@@ -1,29 +1,80 @@
 """Static verification for the plan/executor stack.
 
-Three passes, none of which executes a single segment:
+Five static passes plus one runtime cross-check, all reporting through
+one structured, JSON-dumpable :class:`Diagnostic` stream
+(:mod:`.diagnostics` — deduplicated across passes, deterministic JSON
+ordering):
 
 * :mod:`.schedule_check` — model-checks a ``PlanStreamExecutor``'s
   planned dispatch against the reachable interleavings of its dispatch
-  mode (the PR 7 pool-mode collective-ordering deadlock class,
-  cross-entry use-after-donate, donate-on-shared-plan, double-donation
-  aliasing, per-entry segment order);
+  mode (launch *order*);
+* :mod:`.provenance` — buffer-identity alias analysis over the same
+  queue (views that are ``is``-distinct but share a device buffer,
+  already-deleted operands) plus the shared-plan donation audit
+  surfaced through ``DistributedFFT.verify()``;
+* :mod:`.timed_check` — replays perf-model-priced segment durations
+  through the blocking dispatch semantics (timed mode's per-segment
+  blocking, the pool's Eq. 6 steal-vs-block gate, the ``StepWatchdog``
+  flag window);
 * :mod:`.contracts` — checks a compiled plan's segment chain against
   the sharding contracts the pipeline relies on (boundary layout
   equality via independent hop replay, chunk-schedule divisibility,
-  grid/mesh divisibility, plan-key collision audit across the cache
-  layers);
-* :mod:`.lint` — AST-based repo-specific rules (REP001..REP005),
-  runnable as ``python -m repro.analysis.lint``.
+  plan-key collision audit);
+* :mod:`.lint` — AST-based repo-specific rules, runnable as
+  ``python -m repro.analysis.lint``;
+* :mod:`.sanitize` — the differential sanitizer:
+  ``PlanStreamExecutor(sanitize=True)`` records actual launch order and
+  buffer donations, and :func:`diff_trace` diffs the trace against the
+  static model — "the verifier models the executor" is a tested
+  invariant, not an assumption.
 
-All three emit one structured, JSON-dumpable :class:`Diagnostic`
-stream; see :mod:`.diagnostics`.
+Rule codes
+----------
+========  ========  =====================================================
+code      severity  meaning
+========  ========  =====================================================
+SCHED001  error     pool-mode cross-lane collective-ordering deadlock
+                    reachable (dispatch lock disabled)
+SCHED002  error     an entry's segments dispatched out of index order /
+                    not exactly once
+SCHED003  warning   blocking-mode starvation: a comm-heavy entry chain
+                    monopolizes a lane past the watchdog window while
+                    other entries wait (steal-gated in pool mode)
+SCHED004  warning   watchdog false-flag hazard: a statically predictable
+                    straggler (priced duration over tolerance x rolling
+                    median) — pre-set ``reset_window()`` baselines
+DON001    error     cross-entry use-after-donate (same operand object)
+DON002    error     donation against a shared (wrapper-memoized) plan,
+                    or a shared plan holding donating compiled variants
+ALIAS001  error     one buffer object donated by two entries
+ALIAS002  error     view-aliased donation across entries (is-distinct
+                    wrappers over one device buffer)
+ALIAS003  error     operand buffer already deleted (donated by an
+                    earlier run and re-submitted)
+CON001..5 error     sharding-contract violations (boundary layout replay,
+                    chunk/grid divisibility, plan/wisdom key collisions)
+REP000..5 error     repro-lint (syntax, compat-shimmed jax APIs,
+                    injectable timers, locked wisdom writes, bounded
+                    caches, pure shard_map bodies)
+SAN001    error     sanitizer divergence: an instrumented run did not
+                    match the static model (order, coverage, or donation
+                    provenance)
+========  ========  =====================================================
 """
 from .diagnostics import (Diagnostic, DiagnosticReport,
                           PlanVerificationError)
 from .contracts import check_plan, audit_plan_keys
 from .schedule_check import check_schedule
+from .provenance import (buffers_alias, check_plan_buffers,
+                         check_provenance, expected_donations)
+from .timed_check import check_timed_schedule, replay_watchdog
+from .sanitize import ExecutionTrace, diff_trace, trace_json
 
 __all__ = [
     "Diagnostic", "DiagnosticReport", "PlanVerificationError",
     "check_plan", "audit_plan_keys", "check_schedule",
+    "buffers_alias", "check_plan_buffers", "check_provenance",
+    "expected_donations",
+    "check_timed_schedule", "replay_watchdog",
+    "ExecutionTrace", "diff_trace", "trace_json",
 ]

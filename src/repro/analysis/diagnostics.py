@@ -53,16 +53,31 @@ class Diagnostic:
 
 
 class DiagnosticReport:
-    """An ordered collection of diagnostics from one or more passes."""
+    """An ordered collection of diagnostics from one or more passes.
+
+    Identical findings (same code + where + message) reported by more
+    than one pass collapse to one record — ``DistributedFFT.verify()``
+    and the executor's verify path each stack several passes over the
+    same plan/queue, and a reader counting errors must not double-count
+    one defect.
+    """
 
     def __init__(self, diagnostics: Sequence[Diagnostic] = ()):
-        self.diagnostics: List[Diagnostic] = list(diagnostics)
+        self.diagnostics: List[Diagnostic] = []
+        self._seen: set = set()
+        for d in diagnostics:
+            self.add(d)
 
     def add(self, diag: Diagnostic) -> None:
+        key = (diag.code, diag.where(), diag.message)
+        if key in self._seen:
+            return
+        self._seen.add(key)
         self.diagnostics.append(diag)
 
     def extend(self, other: "DiagnosticReport") -> None:
-        self.diagnostics.extend(other.diagnostics)
+        for d in other.diagnostics:
+            self.add(d)
 
     def __len__(self) -> int:
         return len(self.diagnostics)
@@ -87,10 +102,14 @@ class DiagnosticReport:
         return "\n".join(d.render() for d in self.diagnostics)
 
     def to_json(self, *, indent: Optional[int] = 1) -> str:
+        # Deterministic ordering (code, then where) regardless of which
+        # pass emitted first — CI artifacts diff cleanly across runs.
+        ordered = sorted(self.diagnostics,
+                         key=lambda d: (d.code, d.where(), d.message))
         payload = {
             "count": len(self.diagnostics),
             "errors": len(self.errors),
-            "diagnostics": [d.to_dict() for d in self.diagnostics],
+            "diagnostics": [d.to_dict() for d in ordered],
         }
         return json.dumps(payload, indent=indent, sort_keys=True)
 

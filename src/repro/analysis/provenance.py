@@ -1,0 +1,220 @@
+"""Buffer-provenance alias analysis for the plan-stream executor.
+
+The schedule checker's DON001/ALIAS001 rules compare operands with ``is``
+— object identity.  That misses every *view-aliased* hazard: two jax
+arrays can be ``is``-distinct wrappers over the same device buffer
+(``jax.device_put(x, x.sharding)`` returns a fresh wrapper sharing the
+buffer when the layout already matches; so does
+``jax.make_array_from_single_device_arrays`` over another array's
+shards).  Donating either wrapper deletes the shared buffer, corrupting
+the sibling entry's input, and the ``is``-based rules never fire.  This
+pass tracks buffer *identity* instead:
+
+* **ALIAS002 — view-aliased donation across entries.**  An entry
+  submitted with ``donate=True`` whose operand shares a device buffer
+  with another entry's ``is``-distinct operand.  The reachability rule
+  mirrors DON001: pool-mode interleavings make the hazard a race; in the
+  single-thread modes the hazard is real iff the dispatch order runs the
+  donating segment 0 first.  Two donors over aliasing buffers are wrong
+  in every interleaving (the view-aliased form of ALIAS001).
+* **ALIAS003 — donated buffer re-submitted.**  An entry whose operand
+  buffer is *already deleted* when the queue is planned — typically a
+  buffer donated by an earlier ``run()`` on the same executor stream and
+  re-submitted later.  Deletion is ground truth (``jax.Array.is_deleted``),
+  so this cannot false-positive on allocator pointer reuse.
+
+Buffer identity is the set of per-addressable-shard device buffer
+pointers (``shard.data.unsafe_buffer_pointer()``); two arrays alias iff
+the sets intersect.  Host (numpy) operands are deliberately *not*
+alias-checked against each other: the executor's ``device_put`` copies
+host memory onto the mesh, so host views are donation-safe by
+construction.  Everything here is a read — no segment executes and no
+device memory moves.
+
+The plan-level pass (:func:`check_plan_buffers`, surfaced through
+``DistributedFFT.verify()``) audits the other provenance boundary the
+executor relies on: a ``shared`` (wrapper-memoized) plan must hold no
+donating compiled executables.  ``submit()``/``segments()`` refuse
+donation for shared plans at call time, but a plan compiled *before*
+being marked shared can carry donating variants into the memo — this
+pass catches that ordering (reported as DON002, the donate-on-shared
+rule).
+"""
+from __future__ import annotations
+
+from typing import Any, FrozenSet, Optional, Sequence, Tuple
+
+from .diagnostics import Diagnostic, DiagnosticReport
+
+
+def is_deleted(x: Any) -> bool:
+    """True iff ``x`` is a jax array whose buffer was donated/deleted."""
+    fn = getattr(x, "is_deleted", None)
+    if not callable(fn):
+        return False
+    try:
+        return bool(fn())
+    except Exception:
+        return False
+
+
+def device_buffers(x: Any) -> Optional[FrozenSet[int]]:
+    """The set of device buffer pointers backing ``x``; ``None`` for host
+    operands, deleted arrays, and backends without pointer access."""
+    if is_deleted(x):
+        return None
+    shards = getattr(x, "addressable_shards", None)
+    if shards is None:
+        return None
+    try:
+        ptrs = frozenset(s.data.unsafe_buffer_pointer() for s in shards)
+    except Exception:
+        return None
+    return ptrs or None
+
+
+def buffers_alias(a: Any, b: Any) -> bool:
+    """True iff ``a`` and ``b`` share at least one device buffer.
+
+    ``is``-identical objects trivially alias; host (numpy) operands never
+    device-alias — the executor's ``device_put`` copies them.
+    """
+    if a is b:
+        return True
+    pa, pb = device_buffers(a), device_buffers(b)
+    return bool(pa and pb and pa & pb)
+
+
+def _entry_tag(entries: Sequence, i: int) -> str:
+    tag = getattr(entries[i], "tag", None)
+    return tag if tag else f"entry{i}"
+
+
+def check_provenance(order: Sequence, entries: Sequence, *,
+                     mode: str = "async") -> DiagnosticReport:
+    """Alias-analyze one planned dispatch (ALIAS002 / ALIAS003).
+
+    ``order``/``entries`` are the executor's planned dispatch order and
+    queue, exactly as :func:`~.schedule_check.check_schedule` receives
+    them; this pass adds buffer-identity reasoning on top of the
+    ``is``-identity rules there.
+    """
+    report = DiagnosticReport()
+
+    # ALIAS003: an operand whose buffer is already gone.  Ground truth —
+    # no interleaving can read a deleted buffer back.
+    for i, e in enumerate(entries):
+        if is_deleted(e.x):
+            report.add(Diagnostic(
+                code="ALIAS003", severity="error",
+                message=(f"entry {_entry_tag(entries, i)}: operand buffer is "
+                         f"already deleted — it was donated (consumed) by an "
+                         f"earlier run on this executor stream and "
+                         f"re-submitted"),
+                hint="keep a donation-free copy for re-submission, or drop "
+                     "donate=True from the earlier entry that consumed it",
+                plan_key=_entry_tag(entries, i)))
+
+    donors = [i for i, e in enumerate(entries) if getattr(e, "donate", False)]
+    if not donors:
+        return report
+    seg0_pos = {seg.entry: pos for pos, seg in enumerate(order)
+                if seg.index == 0}
+    for i in donors:
+        for j, other in enumerate(entries):
+            # Same-object pairs are DON001/ALIAS001 territory; this pass
+            # only adds the is-distinct, buffer-aliased cases.
+            if j == i or other.x is entries[i].x:
+                continue
+            if not buffers_alias(entries[i].x, other.x):
+                continue
+            if getattr(other, "donate", False):
+                if j < i:
+                    continue  # one finding per donor pair
+                report.add(Diagnostic(
+                    code="ALIAS002", severity="error",
+                    message=(f"entries {_entry_tag(entries, i)} and "
+                             f"{_entry_tag(entries, j)} both donate "
+                             f"is-distinct views of the same device buffer — "
+                             f"the second launch consumes a buffer already "
+                             f"deleted in every interleaving"),
+                    hint="donate a buffer from at most one entry per run; "
+                         "views share the buffer even when the wrappers "
+                         "compare is-distinct",
+                    plan_key=(f"{_entry_tag(entries, i)}+"
+                              f"{_entry_tag(entries, j)}")))
+                continue
+            racy = mode == "pool"   # whole-entry steals: order is a race
+            pos_i, pos_j = seg0_pos.get(i), seg0_pos.get(j)
+            ordered_hazard = (pos_i is not None and pos_j is not None
+                              and pos_i < pos_j)
+            if racy or ordered_hazard:
+                why = ("pool-mode interleaving can run the donating "
+                       "segment 0 first" if racy else
+                       "the dispatch order runs the donating segment 0 "
+                       "first")
+                report.add(Diagnostic(
+                    code="ALIAS002", severity="error",
+                    message=(f"entry {_entry_tag(entries, j)}'s operand is an "
+                             f"is-distinct view of the buffer entry "
+                             f"{_entry_tag(entries, i)} donates: {why}, so "
+                             f"donation deletes the shared buffer under "
+                             f"entry {_entry_tag(entries, j)}'s input"),
+                    hint="copy the operand before donating (views share the "
+                         "underlying buffer even when the wrappers compare "
+                         "is-distinct), or drop donate=True",
+                    plan_key=(f"{_entry_tag(entries, i)}->"
+                              f"{_entry_tag(entries, j)}")))
+    return report
+
+
+def expected_donations(entries: Sequence, *,
+                       donate_intermediates: bool = True
+                       ) -> Tuple[Tuple[str, bool], ...]:
+    """The static provenance model's donation table for one queue.
+
+    One ``(segment_tag, input_consumed)`` row per dispatchable segment:
+    segment 0 consumes the caller operand iff the entry donates; interior
+    segments consume the executor-owned boundary buffer iff the executor
+    double-buffers (``donate_intermediates``).  The differential
+    sanitizer diffs observed buffer deletions against exactly this table.
+    """
+    rows = []
+    for e in entries:
+        for seg in e.segments:
+            expect = (bool(getattr(e, "donate", False)) if seg.index == 0
+                      else bool(donate_intermediates))
+            rows.append((seg.tag, expect))
+    return tuple(rows)
+
+
+def check_plan_buffers(plan: Any) -> DiagnosticReport:
+    """Plan-level provenance: a shared plan must hold no donating
+    executables (compiled-before-shared ordering; see module docstring)."""
+    report = DiagnosticReport()
+    if not getattr(plan, "shared", False):
+        return report
+    lock = getattr(plan, "_build_lock", None)
+    donating = []
+    if lock is not None:
+        with lock:
+            donating += [f"pipeline(inverse={k[0]})"
+                         for k in getattr(plan, "_exe", {}) if k[1]]
+            donating += [f"jit(inverse={k[0]})"
+                         for k in getattr(plan, "_jit", {}) if k[1]]
+            donating += [f"segments(inverse={k[0]})"
+                         for k in getattr(plan, "_segs", {}) if k[1]]
+    if donating:
+        report.add(Diagnostic(
+            code="DON002", severity="error",
+            message=(f"shared (wrapper-memoized) plan holds "
+                     f"{len(donating)} input-donating compiled variant(s) "
+                     f"({', '.join(sorted(donating))}) — they were compiled "
+                     f"before the plan was marked shared, and any caller "
+                     f"reaching one consumes a buffer other callers may "
+                     f"still own"),
+            hint="mark the plan shared before handing it out (donating "
+                 "compiles are refused once the flag is set), or build a "
+                 "private plan via plan_fft for donation",
+            plan_key=repr(plan)))
+    return report

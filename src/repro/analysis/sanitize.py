@@ -1,0 +1,167 @@
+"""Differential sanitizer: diff an instrumented run against the static model.
+
+The static passes (:mod:`.schedule_check`, :mod:`.provenance`,
+:mod:`.timed_check`) are only as good as their model of the executor.
+``PlanStreamExecutor(sanitize=True)`` turns one run into a test of that
+model: the executor records an :class:`ExecutionTrace` — every segment
+launch (order + dispatch timestamps + measured walls in timed runs) and
+every buffer it fed a segment — and :func:`diff_trace` diffs the trace
+against what the static model says is reachable:
+
+* **launch order** — single-dispatch-thread modes (async, timed) must
+  launch exactly the planned merge; pool mode may launch any merge that
+  preserves each entry's segment chain (the reachable-interleaving set
+  the schedule checker explores) and must launch exactly the planned
+  segment multiset;
+* **donation provenance** — after the run, every buffer the executor fed
+  a segment is checked against the provenance model's donation table
+  (:func:`~.provenance.expected_donations`): a caller operand must be
+  deleted iff the entry donated, an interior boundary buffer iff the
+  executor double-buffers.  ``jax`` deletes donated buffers at dispatch,
+  so ``is_deleted`` is ground truth;
+* **coverage** — every planned segment launched exactly once, none
+  invented.
+
+Any divergence is a **SAN001** diagnostic: the verifier's model of the
+executor is wrong (or the executor regressed), and every static verdict
+built on that model is suspect.  Per-segment walls ride along in the
+trace JSON for operators but never produce SAN001 — wall clocks are
+machine noise, order and provenance are not.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .diagnostics import Diagnostic, DiagnosticReport
+
+
+@dataclasses.dataclass
+class TraceEvent:
+    """One observed segment launch."""
+    entry: int
+    index: int
+    tag: str
+    t_dispatch_s: float           # executor timer at launch
+    wall_s: float = 0.0           # measured duration (timed runs only)
+
+
+@dataclasses.dataclass
+class BufferRecord:
+    """One buffer the executor fed a segment, and its observed fate."""
+    tag: str                      # segment tag that consumed this buffer
+    role: str                     # "operand" | "interior"
+    expect_deleted: bool          # the provenance model's donation table
+    deleted: Optional[bool] = None  # observed after the run
+
+
+@dataclasses.dataclass
+class ExecutionTrace:
+    """Everything one instrumented run observed."""
+    mode: str                     # effective dispatch mode of the run
+    serialized: bool
+    events: List[TraceEvent] = dataclasses.field(default_factory=list)
+    buffers: List[BufferRecord] = dataclasses.field(default_factory=list)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "mode": self.mode,
+            "serialized": self.serialized,
+            "events": [dataclasses.asdict(e) for e in self.events],
+            "buffers": [dataclasses.asdict(b) for b in self.buffers],
+        }
+
+
+def _san(message: str, hint: str, key: str) -> Diagnostic:
+    return Diagnostic(code="SAN001", severity="error", message=message,
+                      hint=hint, plan_key=key)
+
+
+def diff_trace(trace: ExecutionTrace, order: Sequence,
+               entries: Sequence) -> DiagnosticReport:
+    """Diff one observed trace against the planned dispatch it ran.
+
+    ``order``/``entries`` are the *model* — the planned dispatch order
+    the static passes verified (not whatever the executor actually did).
+    """
+    report = DiagnosticReport()
+    planned: List[Tuple[int, int]] = [(s.entry, s.index) for s in order]
+    observed: List[Tuple[int, int]] = [(e.entry, e.index)
+                                       for e in trace.events]
+
+    # Coverage + per-entry chain order (a dependency-chain violation in
+    # any mode).
+    per_entry: Dict[int, List[int]] = {}
+    for ent, idx in observed:
+        per_entry.setdefault(ent, []).append(idx)
+    chains_ok = True
+    for i, e in enumerate(entries):
+        want = list(range(len(e.segments)))
+        got = per_entry.get(i, [])
+        if got != want:
+            chains_ok = False
+            tag = getattr(e, "tag", None) or f"entry{i}"
+            report.add(_san(
+                f"entry {tag}: executor launched segment indices {got}, the "
+                f"model requires {want} (each exactly once, in index "
+                f"order) — the double-buffered workspace chain is a "
+                f"dependency chain",
+                "the executor diverged from the schedule model; fix the "
+                "dispatch loop or update the model before trusting static "
+                "verdicts", tag))
+
+    if trace.mode in ("async", "timed"):
+        # One dispatch thread: the launch order IS the planned merge.
+        if observed != planned:
+            k = next((p for p, (o, m) in enumerate(zip(observed, planned))
+                      if o != m), min(len(observed), len(planned)))
+            o_tag = (trace.events[k].tag if k < len(trace.events)
+                     else "<missing>")
+            m_tag = order[k].tag if k < len(order) else "<none>"
+            report.add(_san(
+                f"{trace.mode}-mode launch order diverges from the planned "
+                f"dispatch order at position {k}: launched {o_tag!r}, model "
+                f"says {m_tag!r} ({len(observed)} observed vs "
+                f"{len(planned)} planned launches)",
+                "single-dispatch-thread modes must launch the planned "
+                "merge verbatim; the interleaving model (and SCHED001's "
+                "total-order argument) is unsound otherwise",
+                f"{trace.mode}@{k}"))
+    elif chains_ok and sorted(observed) != sorted(planned):
+        # Pool mode: any chain-preserving merge is reachable, but the
+        # launched segment multiset must match the plan exactly.
+        report.add(_san(
+            f"pool-mode run launched a different segment multiset than "
+            f"planned ({len(observed)} observed vs {len(planned)} "
+            f"planned)",
+            "the pool dispatched work the schedule model never priced; "
+            "fix the chain submission or the model", "pool"))
+
+    # Donation provenance: observed buffer fates vs the model's table.
+    for rec in trace.buffers:
+        if rec.deleted is None or rec.deleted == rec.expect_deleted:
+            continue
+        want = "donated (deleted)" if rec.expect_deleted else "live"
+        got = "deleted" if rec.deleted else "live"
+        report.add(_san(
+            f"buffer fed to {rec.tag} ({rec.role} input): the provenance "
+            f"model expects it {want} after the run, the runtime left it "
+            f"{got}",
+            "the donation model (DON001/ALIAS002's foundation) diverged "
+            "from the compiled executables; check the donate_input/"
+            "donate_intermediates plumbing", rec.tag))
+    return report
+
+
+def trace_json(trace: Optional[ExecutionTrace],
+               report: Optional[DiagnosticReport]) -> Dict[str, Any]:
+    """The trace-diff artifact CI uploads: observed trace + SAN001 diff."""
+    diags = list(report) if report is not None else []
+    return {
+        "trace": trace.to_json() if trace is not None else None,
+        "diff": {
+            "count": len(diags),
+            "san001": sum(1 for d in diags if d.code == "SAN001"),
+            "diagnostics": [d.to_dict() for d in diags],
+        },
+    }

@@ -33,9 +33,16 @@ interleavings statically:
 * **SCHED002 — per-entry segment-order violation**: each entry's segments
   must appear exactly once, in index order, in the dispatch order (the
   double-buffered workspace chain is a dependency chain).
+* **ALIAS002 / ALIAS003** (via :mod:`.provenance`): the buffer-identity
+  versions of the donation rules — DON001/ALIAS001 compare operands with
+  ``is``, which misses ``is``-distinct views sharing one device buffer
+  and buffers deleted by an earlier run.  ``check_schedule`` runs the
+  provenance pass over the same order/entries, so every caller
+  (``verify_schedule()``, ``run(verify=)``) gets both identity models.
 
 All findings are :class:`~.diagnostics.Diagnostic` records; nothing here
-touches a device.
+touches a device (the provenance pass reads buffer pointers, it never
+moves memory).
 """
 from __future__ import annotations
 
@@ -220,4 +227,9 @@ def check_schedule(order: Sequence, entries: Sequence, *,
                      "dispatch lock) or use mode='async' (single dispatch "
                      "thread)",
                 plan_key=f"{a}|{b}"))
+
+    # ALIAS002 / ALIAS003: buffer-identity alias analysis (views and
+    # deleted buffers the is-identity rules above cannot see).
+    from .provenance import check_provenance  # local: keeps import light
+    report.extend(check_provenance(order, entries, mode=mode))
     return report

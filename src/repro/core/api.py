@@ -371,14 +371,19 @@ class DistributedFFT:
                strict: bool = False):
         """Statically check this plan's sharding contracts (executes
         nothing): every segment-boundary layout re-derived by hop replay,
-        chunk-schedule and grid/mesh divisibility, and the plan-key
-        collision audit (plus wisdom keys when ``tune_cache`` is given).
+        chunk-schedule and grid/mesh divisibility, the plan-key
+        collision audit (plus wisdom keys when ``tune_cache`` is given),
+        and the buffer-provenance audit (a ``shared`` plan holding
+        donating compiled variants — possible when the flag was set
+        after compilation — is flagged DON002).
         Returns the :class:`~repro.analysis.DiagnosticReport`;
         ``strict=True`` raises
         :class:`~repro.analysis.PlanVerificationError` on any error.
         ``describe()`` reports the outcome."""
-        from ..analysis import PlanVerificationError, check_plan
+        from ..analysis import (PlanVerificationError, check_plan,
+                                check_plan_buffers)
         report = check_plan(self, tune_cache=tune_cache)
+        report.extend(check_plan_buffers(self))
         self.verified = not report.errors
         if strict and report.errors:
             raise PlanVerificationError(report, context=repr(self))

@@ -198,11 +198,33 @@ class PlanStreamExecutor:
         (forces timed dispatch).
     verify:
         ``"off"`` (default) | ``"warn"`` | ``"strict"`` — run the static
-        schedule checker (:func:`repro.analysis.check_schedule`) on every
-        planned dispatch order before anything launches.  ``"warn"``
-        reports findings as a warning and proceeds; ``"strict"`` raises
-        :class:`~repro.analysis.PlanVerificationError` with the queue
-        intact (nothing was dispatched).
+        checkers on every planned dispatch order before anything
+        launches: the schedule/provenance pass
+        (:func:`repro.analysis.check_schedule` — launch interleavings
+        plus buffer-identity alias analysis) and, for blocking modes,
+        the timed model (:func:`repro.analysis.check_timed_schedule` —
+        starvation and watchdog-flag replay over priced durations).
+        ``"warn"`` reports findings as a warning and proceeds;
+        ``"strict"`` raises
+        :class:`~repro.analysis.PlanVerificationError` on *errors* with
+        the queue intact (nothing was dispatched; SCHED003/SCHED004 are
+        warnings and never refuse a queue).
+    verify_sink:
+        Optional callable receiving every non-empty
+        :class:`~repro.analysis.DiagnosticReport` the verify and
+        sanitize paths produce, *instead of* a Python warning (strict
+        errors still raise).  The serving layer points this at
+        ``ServingMetrics`` so production drains surface findings as
+        counters.
+    sanitize:
+        Record an :class:`~repro.analysis.ExecutionTrace` of every run
+        (actual launch order, dispatch timestamps, observed buffer
+        donations via jax deletion checks) and diff it against the
+        static model (:func:`repro.analysis.diff_trace`).  Divergences
+        are SAN001 diagnostics, reported through ``verify_sink`` or a
+        warning and kept on :meth:`last_sanitize_report`.  Opt-in: the
+        trace holds references to interior boundary buffers until the
+        next run.
     serialize_dispatch:
         Hold the global dispatch lock around every segment launch
         (default True — the collective launch-order invariant).  Setting
@@ -219,7 +241,8 @@ class PlanStreamExecutor:
                  cost_model: Optional[CostModel] = None, watchdog=None,
                  mode: str = "async", donate_intermediates: bool = True,
                  profile: bool = False, verify: str = "off",
-                 serialize_dispatch: bool = True,
+                 serialize_dispatch: bool = True, sanitize: bool = False,
+                 verify_sink: Optional[Callable[[Any], None]] = None,
                  timer: Callable[[], float] = time.perf_counter):
         if mode not in DISPATCH_MODES:
             raise ValueError(f"mode must be one of {DISPATCH_MODES}, "
@@ -236,6 +259,8 @@ class PlanStreamExecutor:
         self.profile = bool(profile)
         self.verify = verify
         self.serialize_dispatch = bool(serialize_dispatch)
+        self.sanitize = bool(sanitize)
+        self.verify_sink = verify_sink
         self.timer = timer
         self._queue: List[_Entry] = []
         # Collective-safety: segment executables contain all_to_all
@@ -252,6 +277,16 @@ class PlanStreamExecutor:
         self._last_schedule: List[SegmentTask] = []
         self._last_report: Dict[str, Any] = {}
         self._last_verify = None            # DiagnosticReport of last check
+        # Sanitizer state: the in-flight trace (events appended under
+        # _trace_lock — pool workers race), buffer refs awaiting the
+        # post-run deletion check, the model order the diff runs against,
+        # and the last run's trace + SAN001 report.
+        self._trace = None
+        self._trace_refs: List[Tuple[Any, jax.Array]] = []
+        self._trace_lock = threading.Lock()
+        self._planned_order: List[SegmentTask] = []
+        self._last_trace = None
+        self._last_sanitize = None
 
     # -- queue management ---------------------------------------------------
 
@@ -337,12 +372,32 @@ class PlanStreamExecutor:
         from .tuner import default_machine  # deferred: jax-backend probe
         return default_machine()
 
+    def _effective_mode(self) -> str:
+        """The dispatch semantics a run will actually use: a wired
+        watchdog or ``profile=True`` forces per-segment blocking
+        (timed) dispatch regardless of ``mode``."""
+        if self.mode == "timed" or self.watchdog is not None or self.profile:
+            return "timed"
+        return self.mode
+
     def _check_schedule(self, order: Sequence[SegmentTask],
                         entries: List[_Entry]):
-        """Static checker over one planned order (no segment executes)."""
-        from ..analysis import check_schedule  # deferred: avoid cycle
-        return check_schedule(order, entries, mode=self.mode,
-                              serialized=self.serialize_dispatch)
+        """Static checkers over one planned order (no segment executes):
+        the interleaving + provenance pass, plus the blocking-semantics
+        model for the modes that block (timed/pool)."""
+        from ..analysis import (check_schedule,  # deferred: avoid cycle
+                                check_timed_schedule)
+        report = check_schedule(order, entries, mode=self.mode,
+                                serialized=self.serialize_dispatch)
+        eff = self._effective_mode()
+        if eff in ("timed", "pool"):
+            wd = self.watchdog
+            report.extend(check_timed_schedule(
+                order, entries, mode=eff, cost_model=self.cost_model,
+                tolerance=wd.tolerance if wd is not None else 2.0,
+                window=(wd.durations.maxlen or 32) if wd is not None
+                else 32))
+        return report
 
     def verify_schedule(self):
         """Plan the current queue and statically verify it — without
@@ -399,10 +454,35 @@ class PlanStreamExecutor:
         with lock:
             cur = (bufs[seg.entry] if seg.index > 0
                    else self._prepare_input(entry))
+            if self._trace is not None:
+                self._record_launch(entry, seg, cur)
             out = exes[seg.index](cur)
             bufs[seg.entry] = out
             if seg.index == len(entry.segments) - 1:
                 entry.out = out
+
+    def _record_launch(self, entry: _Entry, seg: SegmentTask,
+                       cur: jax.Array) -> None:
+        """Sanitizer hook: one observed launch + the buffer it consumes.
+
+        The donation expectation mirrors the compile flags exactly —
+        segment 0's executable donates its input iff the entry donated,
+        interior executables iff the executor double-buffers — which is
+        also what :func:`repro.analysis.expected_donations` derives, so
+        the diff tests the model, not this mirror.
+        """
+        from ..analysis.sanitize import BufferRecord, TraceEvent
+        rec = BufferRecord(
+            tag=seg.tag,
+            role="operand" if seg.index == 0 else "interior",
+            expect_deleted=(entry.donate if seg.index == 0
+                            else self.donate_intermediates))
+        with self._trace_lock:
+            self._trace.events.append(TraceEvent(
+                entry=seg.entry, index=seg.index, tag=seg.tag,
+                t_dispatch_s=self.timer()))
+            self._trace.buffers.append(rec)
+            self._trace_refs.append((rec, cur))
 
     def run(self) -> List[jax.Array]:
         """Execute every queued entry; returns outputs in submit order.
@@ -433,6 +513,7 @@ class PlanStreamExecutor:
             for seg in e.segments:
                 seg.measured_s = 0.0
         order = self._plan_schedule(entries)
+        self._planned_order = list(order)    # the model the sanitizer diffs
 
         if self.verify != "off":
             report = self._check_schedule(order, entries)
@@ -443,14 +524,53 @@ class PlanStreamExecutor:
                 raise PlanVerificationError(
                     report, context="PlanStreamExecutor.run(verify='strict')")
             if report:
-                warnings.warn("PlanStreamExecutor schedule check:\n"
-                              + report.render(), stacklevel=2)
+                if self.verify_sink is not None:
+                    self.verify_sink(report)
+                else:
+                    warnings.warn("PlanStreamExecutor schedule check:\n"
+                                  + report.render(), stacklevel=2)
 
         self._running = True
+        if self.sanitize:
+            from ..analysis import ExecutionTrace
+            self._trace = ExecutionTrace(mode=self._effective_mode(),
+                                         serialized=self.serialize_dispatch)
+            self._trace_refs = []
         try:
-            return self._run_order(order, entries)
+            outs = self._run_order(order, entries)
+        except BaseException:
+            self._trace, self._trace_refs = None, []
+            raise
         finally:
             self._running = False
+        if self._trace is not None:
+            self._finish_sanitize(entries)
+        return outs
+
+    def _finish_sanitize(self, entries: List[_Entry]) -> None:
+        """Close out one instrumented run: settle observed buffer fates
+        (donation deletes at dispatch, so everything is decided once
+        ``_run_order`` returned), attach measured walls, diff the trace
+        against the planned order, and report any SAN001 divergence."""
+        from ..analysis import diff_trace
+        from ..analysis.provenance import is_deleted
+        trace, self._trace = self._trace, None
+        refs, self._trace_refs = self._trace_refs, []
+        for rec, arr in refs:
+            rec.deleted = is_deleted(arr)
+        walls = {s.tag: s.measured_s for s in self._planned_order
+                 if s.measured_s > 0}
+        for ev in trace.events:
+            ev.wall_s = walls.get(ev.tag, 0.0)
+        report = diff_trace(trace, self._planned_order, entries)
+        self._last_trace = trace
+        self._last_sanitize = report
+        if report:
+            if self.verify_sink is not None:
+                self.verify_sink(report)
+            else:
+                warnings.warn("PlanStreamExecutor sanitizer divergence:\n"
+                              + report.render(), stacklevel=3)
 
     def _run_order(self, order: List[SegmentTask],
                    entries: List[_Entry]) -> List[jax.Array]:
@@ -523,6 +643,28 @@ class PlanStreamExecutor:
     def last_schedule(self) -> List[SegmentTask]:
         """The dispatch order the last run chose (SegmentTask records)."""
         return list(self._last_schedule)
+
+    def last_verify_report(self):
+        """The :class:`~repro.analysis.DiagnosticReport` of the last
+        verify pass (``None`` when ``verify="off"`` or nothing ran)."""
+        return self._last_verify
+
+    def last_sanitize_report(self):
+        """The SAN001 diff of the last instrumented run (``None`` until a
+        ``sanitize=True`` run completes; empty means the executor matched
+        the static model exactly)."""
+        return self._last_sanitize
+
+    def last_trace(self):
+        """The :class:`~repro.analysis.ExecutionTrace` of the last
+        instrumented run (``None`` until a ``sanitize=True`` run)."""
+        return self._last_trace
+
+    def sanitize_json(self) -> Dict[str, Any]:
+        """The trace-diff artifact (observed trace + SAN001 diff) of the
+        last instrumented run, JSON-serializable."""
+        from ..analysis import trace_json
+        return trace_json(self._last_trace, self._last_sanitize)
 
     def entry_times(self) -> Dict[str, float]:
         """Measured wall seconds per entry tag from the last **timed** run

@@ -50,6 +50,10 @@ class ServingMetrics:
         # Fault / degradation counters.
         self.device_loss_events = 0
         self.straggler_count = 0
+        # Static-verifier findings per rule code (ALIAS002, SCHED004, ...)
+        # — the executor's verify_sink feeds these so production drains
+        # surface findings as counters instead of Python warnings.
+        self.verify_findings: Dict[str, int] = {}
         # Samples.
         self._latencies: List[Tuple[float, bool]] = []  # (seconds, degraded)
         self._queue_depths: List[int] = []
@@ -118,6 +122,20 @@ class ServingMetrics:
             self.straggler_count = max(self.straggler_count,
                                        int(total_flagged))
 
+    def record_verify_findings(self, report) -> None:
+        """Count one verify/sanitize report's findings per rule code.
+
+        ``report`` is a :class:`~repro.analysis.DiagnosticReport` (or any
+        iterable of objects with a ``code``); wired as the executor's
+        ``verify_sink`` so ``verify="warn"`` drains land here instead of
+        in ``warnings.warn``.
+        """
+        with self._lock:
+            for d in report:
+                code = getattr(d, "code", str(d))
+                self.verify_findings[code] = \
+                    self.verify_findings.get(code, 0) + 1
+
     # -- report -------------------------------------------------------------
 
     @property
@@ -173,6 +191,7 @@ class ServingMetrics:
                     "stragglers_flagged": self.straggler_count,
                     "degraded": self._degraded_since is not None,
                 },
+                "verify_warnings": dict(self.verify_findings),
             }
         snap["plan_cache"]["hit_rate"] = self.plan_hit_rate
         snap["queue_depth"] = {

@@ -60,9 +60,14 @@ class FFTService:
         # ONE executor for the service lifetime (it is not mesh-bound);
         # watchdog= implies timed dispatch, so every segment is measured.
         # verify= is forwarded: every drain's planned segment order passes
-        # the static schedule checker before anything launches.
-        self.executor = PlanStreamExecutor(watchdog=self.watchdog,
-                                           verify=verify, timer=timer)
+        # the static schedule/provenance/timed checkers before anything
+        # launches, and findings land in ServingMetrics as per-code
+        # counters (the verify_sink) rather than Python warnings — the
+        # JSON dump's "verify_warnings" section is the production surface.
+        self.executor = PlanStreamExecutor(
+            watchdog=self.watchdog, verify=verify, timer=timer,
+            verify_sink=(self.metrics.record_verify_findings
+                         if verify != "off" else None))
         self._bucket_edges = tuple(bucket_edges)
         self._max_batch = max_batch
         self.degraded = False

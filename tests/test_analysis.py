@@ -485,14 +485,17 @@ def test_rep000_syntax_error_and_cli(tmp_path):
     assert main([str(clean)]) == 0
 
 
-def test_lint_src_tree_is_clean():
-    """The satellite: the shipped tree has zero true REP00x findings
-    (suppressions carry inline reasons)."""
+def test_lint_whole_program_is_clean():
+    """The whole-program satellite: src/, tests/ AND benchmarks/ have
+    zero true REP00x findings.  Benchmark timing helpers expose an
+    injectable ``timer=`` (the REP002 convention) instead of burying
+    ``perf_counter`` calls; suppressions carry inline reasons."""
     import os
 
     from repro.analysis.lint import lint_paths
-    src = os.path.join(os.path.dirname(__file__), "..", "src")
-    report = lint_paths([src])
+    root = os.path.join(os.path.dirname(__file__), "..")
+    trees = [os.path.join(root, d) for d in ("src", "tests", "benchmarks")]
+    report = lint_paths(trees)
     assert len(report) == 0, "\n" + report.render()
 
 
@@ -518,3 +521,391 @@ def test_service_strict_verify_smoke(cpu_mesh):
         < 1e-4
     assert svc.executor._last_verify is not None
     assert not len(svc.executor._last_verify)
+
+
+# ---------------------------------------------------------------------------
+# Diagnostics dedup + deterministic JSON (the bugfix satellite)
+# ---------------------------------------------------------------------------
+
+def test_diagnostic_report_dedups_and_sorts_json():
+    """Identical findings (code+where+message) reported by stacked passes
+    collapse to one record; ``to_json`` orders by (code, where, message)
+    regardless of insertion order — so CI artifact diffs are stable."""
+    import json
+
+    from repro.analysis import Diagnostic, DiagnosticReport
+    dup = Diagnostic(code="DON001", severity="error", message="same defect",
+                     plan_key="entry1/seg0")
+    rep = DiagnosticReport([dup])
+    rep.add(Diagnostic(code="DON001", severity="error",
+                       message="same defect", plan_key="entry1/seg0"))
+    rep.extend(DiagnosticReport([dup]))
+    assert len(rep) == 1                       # three reports, one record
+    # different where() or message survives as a distinct finding
+    rep.add(Diagnostic(code="DON001", severity="error",
+                       message="same defect", plan_key="entry2/seg0"))
+    rep.add(Diagnostic(code="ALIAS002", severity="error", message="later"))
+    assert len(rep) == 3
+    payload = json.loads(rep.to_json())
+    keys = [(d["code"], d.get("plan_key", "")) for d in payload["diagnostics"]]
+    assert keys == sorted(keys)                # ALIAS002 first, then DON001s
+    assert payload["count"] == 3 and payload["errors"] == 3
+
+
+# ---------------------------------------------------------------------------
+# Buffer provenance: ALIAS002 / ALIAS003 (the tentpole seeded hazards)
+# ---------------------------------------------------------------------------
+
+def _buffer_view(x):
+    """An ``is``-distinct jax array sharing x's device buffers — the alias
+    that defeats the ``is``-identity DON001 check.  (``jax.device_put``
+    with the same sharding short-circuits to the same object, so the
+    wrapper must be built from the addressable shards directly.)"""
+    import jax
+    return jax.make_array_from_single_device_arrays(
+        x.shape, x.sharding, [s.data for s in x.addressable_shards])
+
+
+def test_buffers_alias_identity_and_views(cpu_mesh):
+    import jax
+
+    from repro.analysis import buffers_alias
+    from repro.core import plan_fft
+    rng = np.random.default_rng(0)
+    p = plan_fft(cpu_mesh, (8, 8))
+    x = jax.device_put(_cx(rng, (8, 8)), p.in_struct.sharding)
+    view = _buffer_view(x)
+    assert view is not x
+    assert buffers_alias(x, x)
+    assert buffers_alias(x, view) and buffers_alias(view, x)
+    y = jax.device_put(_cx(rng, (8, 8)), p.in_struct.sharding)
+    assert not buffers_alias(x, y)
+    # host operands never device-alias (the entry device_put copies them)
+    h = np.zeros((8, 8), np.complex64)
+    assert not buffers_alias(h, h.view())
+
+
+def test_alias002_view_aliased_donation_flagged_statically(cpu_mesh):
+    """The acceptance hazard: donate a buffer-view of another entry's
+    operand.  HEAD's ``is``-identity pass cannot see it; the provenance
+    pass flags ALIAS002 before anything launches, strict refuses the run
+    and leaves the queue resubmittable."""
+    import jax
+
+    from repro.analysis import PlanVerificationError
+    from repro.core import PlanStreamExecutor, plan_fft
+    rng = np.random.default_rng(1)
+    p = plan_fft(cpu_mesh, (8, 8))
+    x = jax.device_put(_cx(rng, (8, 8)), p.in_struct.sharding)
+    ex = PlanStreamExecutor(verify="strict")
+    ex.submit(p, _buffer_view(x), donate=True)
+    ex.submit(p, x)
+    rep = ex.verify_schedule()
+    assert "ALIAS002" in rep.codes()
+    with pytest.raises(PlanVerificationError) as ei:
+        ex.run()
+    assert "ALIAS002" in ei.value.report.codes()
+    assert len(ex) == 2                        # strict left the queue intact
+
+
+def test_alias002_hazard_corrupts_at_runtime_without_verify(cpu_mesh):
+    """The same queue with verification off actually corrupts: donating
+    the view deletes the shared buffer under the sibling entry."""
+    import jax
+
+    from repro.core import PlanStreamExecutor, plan_fft
+    rng = np.random.default_rng(2)
+    p = plan_fft(cpu_mesh, (8, 8))
+    x = jax.device_put(_cx(rng, (8, 8)), p.in_struct.sharding)
+    ex = PlanStreamExecutor()
+    ex.submit(p, _buffer_view(x), donate=True)
+    ex.submit(p, x)
+    # jax surfaces the corruption as RuntimeError ("Array has been
+    # deleted") or ValueError ("buffer has been deleted or donated")
+    # depending on which dispatch path trips first.
+    with pytest.raises((RuntimeError, ValueError), match="deleted"):
+        jax.block_until_ready(ex.run())
+
+
+def test_alias003_deleted_operand_resubmitted(cpu_mesh):
+    """Donate, run, then resubmit the (now deleted) operand on the same
+    executor stream: flagged ALIAS003 statically instead of a runtime
+    'Array has been deleted' mid-dispatch."""
+    import jax
+
+    from repro.analysis import PlanVerificationError
+    from repro.core import PlanStreamExecutor, plan_fft
+    rng = np.random.default_rng(3)
+    p = plan_fft(cpu_mesh, (8, 8))
+    x = jax.device_put(_cx(rng, (8, 8)), p.in_struct.sharding)
+    ex = PlanStreamExecutor(verify="strict")
+    ex.submit(p, x, donate=True, sharded_in=True)
+    jax.block_until_ready(ex.run())
+    assert x.is_deleted()
+    ex.submit(p, x, sharded_in=True)
+    with pytest.raises(PlanVerificationError) as ei:
+        ex.run()
+    assert "ALIAS003" in ei.value.report.codes()
+
+
+def test_don002_shared_plan_with_donating_variants(cpu_mesh):
+    """A plan published as shared after building donate_input=True segment
+    executables: ``DistributedFFT.verify()`` flags DON002 (one caller's
+    donation deletes a buffer other callers still hold)."""
+    from repro.core import plan_fft
+    p = plan_fft(cpu_mesh, (8, 8))
+    p.segments(donate_input=True)              # build a donating variant
+    assert "DON002" not in p.verify().codes()  # unshared: fine
+    p.shared = True
+    rep = p.verify()
+    assert "DON002" in rep.codes()
+    assert any(d.severity == "error" for d in rep
+               if d.code == "DON002")
+
+
+# ---------------------------------------------------------------------------
+# Timed schedule model: SCHED003 / SCHED004 (fake-clock units)
+# ---------------------------------------------------------------------------
+
+def _fake_queue(chains, kinds=None, streams=None):
+    """Synthetic (order, entries) from per-entry cost chains.  ``kinds``
+    maps entry index -> segment kind; order is entry-major (the merge the
+    executor produces for a single lane)."""
+    from types import SimpleNamespace
+
+    from repro.core.executor import SegmentTask
+    entries, order = [], []
+    for i, costs in enumerate(chains):
+        stream = streams[i] if streams else 0
+        kind = kinds[i] if kinds else "comp"
+        segs = [SegmentTask(entry=i, index=j, kind=kind, cost_s=c,
+                            bytes_out=0, tag=f"e{i}", stream=stream)
+                for j, c in enumerate(costs)]
+        entries.append(SimpleNamespace(tag=f"e{i}", segments=segs,
+                                       stream=stream, donate=False))
+        order.extend(segs)
+    return order, entries
+
+
+def test_replay_watchdog_mirrors_step_watchdog():
+    """The replay excludes flagged durations from its rolling window, so
+    one straggler cannot poison the baseline — consecutive outliers each
+    flag (exactly StepWatchdog's semantics)."""
+    from repro.analysis import replay_watchdog
+    clean = [1.0] * 20
+    assert replay_watchdog(clean) == []
+    # below min_samples nothing flags, however large the spike
+    assert replay_watchdog([1.0] * 7 + [50.0]) == []
+    flagged = replay_watchdog([1.0] * 8 + [10.0, 10.0, 10.0])
+    assert flagged == [8, 9, 10]
+
+
+def test_sched004_watchdog_false_flag_window(cpu_mesh):
+    """A priced chain whose tail segment costs 10x the rolling median
+    would be flagged by a tolerance-2 watchdog on a healthy run: the
+    timed model warns SCHED004 before dispatch."""
+    from repro.analysis import check_timed_schedule
+    order, entries = _fake_queue([[1.0] * 10 + [10.0]])
+    rep = check_timed_schedule(order, entries, mode="timed")
+    assert rep.codes() == ["SCHED004"]
+    assert all(d.severity == "warning" for d in rep)
+    # a tolerant watchdog would not flag it: no finding
+    assert not check_timed_schedule(order, entries, mode="timed",
+                                    tolerance=16.0)
+    # non-blocking dispatch never consults the watchdog model
+    assert not check_timed_schedule(order, entries, mode="async")
+
+
+def test_sched003_timed_mode_starvation():
+    """One entry monopolizing the blocking stream with a comm-heavy chain
+    longer than the watchdog window span starves the queue: SCHED003."""
+    from repro.analysis import check_timed_schedule
+    order, entries = _fake_queue([[1.0] * 40, [1.0, 1.0]],
+                                 kinds=["comm", "comp"])
+    rep = check_timed_schedule(order, entries, mode="timed")
+    assert "SCHED003" in rep.codes()
+    assert all(d.severity == "warning" for d in rep
+               if d.code == "SCHED003")
+    # a short chain (under the window span) is fine
+    order2, entries2 = _fake_queue([[1.0] * 8, [1.0, 1.0]],
+                                   kinds=["comm", "comp"])
+    assert "SCHED003" not in check_timed_schedule(
+        order2, entries2, mode="timed").codes()
+    # a compute-heavy monopolist overlaps fine: no finding
+    order3, entries3 = _fake_queue([[1.0] * 40, [1.0, 1.0]],
+                                   kinds=["comp", "comp"])
+    assert "SCHED003" not in check_timed_schedule(
+        order3, entries3, mode="timed").codes()
+
+
+def test_sched003_pool_mode_steal_gate():
+    """Pool mode: a comm-heavy lane monopoly only warns when Eq. 6 says
+    no other lane would steal the waiting work (steal cost above half the
+    backlog).  With the default cost model the steal fires: clean."""
+    from repro.analysis import check_timed_schedule
+    from repro.core.scheduler import CostModel
+    chains = [[1.0] * 40, [0.5, 0.5], [1.0]]
+    order, entries = _fake_queue(chains, kinds=["comm", "comp", "comp"],
+                                 streams=[0, 0, 1])
+    expensive = CostModel(steal_overhead_s=10.0)   # tau_s >> backlog/2
+    rep = check_timed_schedule(order, entries, mode="pool",
+                               cost_model=expensive)
+    assert "SCHED003" in rep.codes()
+    assert not check_timed_schedule(order, entries, mode="pool",
+                                    cost_model=CostModel())
+
+
+# ---------------------------------------------------------------------------
+# Differential sanitizer: SAN001
+# ---------------------------------------------------------------------------
+
+def _three_entry_queue(cpu_mesh):
+    from repro.core import plan_fft
+    rng = np.random.default_rng(7)
+    p2d = plan_fft(cpu_mesh, (8, 8))
+    p3d = plan_fft(cpu_mesh, (4, 4, 8))
+    return [(p2d, _cx(rng, (8, 8)), False),
+            (p3d, _cx(rng, (4, 4, 8)), False),
+            (p2d, _cx(rng, (8, 8)), True)]    # last entry donates
+
+
+@pytest.mark.parametrize("mode", ["async", "pool", "timed"])
+def test_sanitizer_clean_on_faithful_executor(cpu_mesh, mode):
+    """sanitize=True on the real executor: the recorded trace matches the
+    static model in every dispatch mode — zero SAN001, results exact."""
+    import warnings
+
+    import jax
+
+    from repro.core import PlanStreamExecutor
+    ex = PlanStreamExecutor(mode=mode, sanitize=True, verify="strict")
+    refs = []
+    for plan, x, donate in _three_entry_queue(cpu_mesh):
+        refs.append(np.fft.fftn(np.asarray(x)))
+        ex.submit(plan, x, donate=donate)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")         # any SAN001 warning -> fail
+        outs = ex.run()
+        jax.block_until_ready(outs)
+    assert ex.last_sanitize_report() is not None
+    assert len(ex.last_sanitize_report()) == 0
+    trace = ex.last_trace()
+    assert len(trace.events) == len(trace.buffers) > 0
+    payload = ex.sanitize_json()
+    assert payload["diff"]["san001"] == 0
+    for y, ref in zip(outs, refs):
+        scale = max(float(np.max(np.abs(ref))), 1e-30)
+        assert float(np.max(np.abs(np.asarray(y) - ref))) / scale < 1e-4
+
+
+def test_san001_order_divergence_from_mismodeled_executor(cpu_mesh):
+    """A deliberately mis-modeled executor (dispatches a chain-preserving
+    permutation that differs from the planned merge) diverges: SAN001,
+    routed to the verify_sink instead of a warning."""
+    import jax
+
+    from repro.core import PlanStreamExecutor
+
+    class MisModeled(PlanStreamExecutor):
+        def _run_order(self, order, entries):
+            rr = sorted(order, key=lambda s: (s.index, s.entry))
+            em = sorted(order, key=lambda s: (s.entry, s.index))
+            alt = rr if [id(s) for s in rr] != [id(s) for s in order] else em
+            return super()._run_order(alt, entries)
+
+    findings = []
+    ex = MisModeled(sanitize=True, verify_sink=findings.append)
+    for plan, x, _ in _three_entry_queue(cpu_mesh)[:2]:
+        ex.submit(plan, x)
+    jax.block_until_ready(ex.run())
+    rep = ex.last_sanitize_report()
+    assert "SAN001" in rep.codes()
+    assert findings and "SAN001" in findings[-1].codes()
+    assert ex.sanitize_json()["diff"]["san001"] >= 1
+
+
+def test_san001_donation_divergence(cpu_mesh):
+    """An executor that silently ignores donate= (the model expects the
+    operand deleted, the runtime leaves it live) is caught: SAN001."""
+    import jax
+
+    from repro.core import PlanStreamExecutor, plan_fft
+
+    class NoDonate(PlanStreamExecutor):
+        def _segment_exes(self, entry):
+            return entry.plan.segments(
+                inverse=entry.inverse, donate_input=False,
+                donate_intermediates=self.donate_intermediates)
+
+    findings = []
+    ex = NoDonate(sanitize=True, verify_sink=findings.append)
+    rng = np.random.default_rng(11)
+    p = plan_fft(cpu_mesh, (8, 8))
+    import jax as _jax
+    x = _jax.device_put(_cx(rng, (8, 8)), p.in_struct.sharding)
+    ex.submit(p, x, donate=True, sharded_in=True)
+    jax.block_until_ready(ex.run())
+    assert not x.is_deleted()                  # the runtime really diverged
+    rep = ex.last_sanitize_report()
+    assert "SAN001" in rep.codes()
+    assert any("donate" in d.message for d in rep if d.code == "SAN001")
+    assert findings and "SAN001" in findings[-1].codes()
+
+
+def test_expected_donations_model(cpu_mesh):
+    from types import SimpleNamespace
+
+    from repro.analysis import expected_donations
+    from repro.core.executor import SegmentTask
+
+    def seg(i, j):
+        return SegmentTask(entry=i, index=j, kind="comp", cost_s=1.0,
+                           bytes_out=0, tag=f"e{i}/seg{j}", stream=0)
+    entries = [SimpleNamespace(tag="e0", donate=True,
+                               segments=[seg(0, 0), seg(0, 1)]),
+               SimpleNamespace(tag="e1", donate=False,
+                               segments=[seg(1, 0)])]
+    rows = dict(expected_donations(entries))
+    assert rows["e0/seg0"] is True             # entry donated its operand
+    assert rows["e0/seg1"] is True             # interior double-buffering
+    assert rows["e1/seg0"] is False
+    rows2 = dict(expected_donations(entries, donate_intermediates=False))
+    assert rows2["e0/seg0"] is True and rows2["e0/seg1"] is False
+
+
+# ---------------------------------------------------------------------------
+# Serving: verify findings as metrics counters
+# ---------------------------------------------------------------------------
+
+def test_verify_findings_feed_serving_metrics(cpu_mesh):
+    """verify='warn' wires the executor's verify_sink to ServingMetrics:
+    findings land as per-code counters in the JSON dump instead of
+    Python warnings."""
+    import json
+
+    import jax.numpy as jnp
+
+    from repro.analysis import Diagnostic, DiagnosticReport
+    from repro.serving import FFTService
+    svc = FFTService(cpu_mesh, bucket_edges=(8, 16), verify="warn")
+    assert svc.executor.verify_sink == svc.metrics.record_verify_findings
+    # a clean drain records nothing
+    rng = np.random.default_rng(9)
+    x = (rng.standard_normal((8, 8))
+         + 1j * rng.standard_normal((8, 8))).astype(np.complex64)
+    svc.submit(jnp.asarray(x))
+    svc.drain()
+    assert svc.metrics.verify_findings == {}
+    # seeded findings count per code across reports
+    svc.executor.verify_sink(DiagnosticReport([
+        Diagnostic(code="SCHED004", severity="warning", message="w1"),
+        Diagnostic(code="ALIAS002", severity="error", message="e1")]))
+    svc.executor.verify_sink(DiagnosticReport([
+        Diagnostic(code="SCHED004", severity="warning", message="w2")]))
+    assert svc.metrics.verify_findings == {"SCHED004": 2, "ALIAS002": 1}
+    snap = svc.metrics.to_json()
+    json.dumps(snap)                           # must stay serializable
+    assert snap["verify_warnings"] == {"SCHED004": 2, "ALIAS002": 1}
+    # verify='off' services have no sink wired
+    svc2 = FFTService(cpu_mesh, bucket_edges=(8, 16))
+    assert svc2.executor.verify_sink is None
